@@ -1,0 +1,68 @@
+"""Analytic FLOP/byte model (the MODEL_FLOPS side of the roofline ratio).
+
+MODEL_FLOPS follows the assignment's definition:
+    train   : 6 * N * D        (N = params; N_active for MoE)
+    prefill : 2 * N * D
+    decode  : 2 * N * B        (one token per sequence)
+with D = tokens processed.  Attention score/PV FLOPs are *excluded* here by
+definition — they show up in HLO_FLOPS, so the reported ratio
+MODEL_FLOPS / HLO_FLOPS surfaces attention cost, head/vocab padding waste,
+MoE dispatch overhead and remat recompute all at once (per-cell notes in
+EXPERIMENTS.md attribute which is dominant).
+"""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+
+
+def tokens(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    if shape.kind == "decode":
+        return shape.global_batch  # one new token per sequence
+    return shape.global_batch * shape.seq_len
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens(cfg, shape)
+
+
+def attention_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Extra QK^T + PV FLOPs (not in 6ND): reported as context, and used by
+    the per-cell notes to attribute the MODEL/HLO gap."""
+    if cfg.family == "ssm":
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    H, hd = cfg.n_heads, cfg.head_dim
+    L = cfg.n_layers if cfg.family != "hybrid" else \
+        cfg.n_layers // max(cfg.attn_every, 1)
+    if shape.kind == "decode":
+        kv_len = min(S, cfg.swa_window or S)
+        per = 2 * 2 * B * H * hd * kv_len        # QK + PV vs full cache
+        return float(L * per)
+    kv_len = min(S, cfg.swa_window or S)
+    causal = 0.5 if (cfg.causal and cfg.swa_window is None) else 1.0
+    per = 2 * 2 * B * S * kv_len * H * hd * causal
+    mult = 3.0 if shape.kind == "train" else 1.0  # fwd+bwd
+    return float(L * per * mult)
+
+
+def hbm_bytes_estimate(cfg: ModelConfig, shape: ShapeConfig,
+                       n_devices: int) -> float:
+    """Analytic per-device HBM floor: weights (+opt for train) + KV cache per
+    step.  Used to sanity-check memory_analysis (the CPU host backend
+    promotes loop-carried bf16 buffers to f32, inflating temp <= 2x)."""
+    n = cfg.param_count()
+    per_dev = n / n_devices
+    if shape.kind == "train":
+        micro = max(cfg.microbatch, 1)
+        return per_dev * (2 + 4 + 8) + \
+            2 * cfg.n_layers * (shape.global_batch / micro) * \
+            shape.seq_len * cfg.d_model / n_devices * 16
+    cache = 0.0
+    if cfg.family in ("dense", "moe", "vlm"):
+        kv_len = min(shape.seq_len, cfg.swa_window or shape.seq_len)
+        cache = (2 * cfg.n_layers * shape.global_batch * kv_len *
+                 cfg.n_kv_heads * cfg.head_dim * 2) / n_devices
+    return per_dev * 2 + cache

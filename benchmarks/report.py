@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS tables from the experiment JSON artifacts.
+
+  PYTHONPATH=src:. python -m benchmarks.report > experiments/tables.md
+"""
+from __future__ import annotations
+
+import json
+import os
+
+EXP = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(
+    __file__))), "experiments")
+
+
+def _load(name):
+    path = os.path.join(EXP, name)
+    return json.load(open(path)) if os.path.exists(path) else None
+
+
+def dryrun_tables():
+    for tag, chips in (("single", 256), ("multi", 512)):
+        rs = _load(f"dryrun_{tag}.json")
+        if not rs:
+            continue
+        rows = [r for r in rs if "peak_bytes_per_device" in r]
+        print(f"\n### Dry-run ({tag}-pod mesh, {chips} chips)\n")
+        print("| arch | shape | compile s | peak GiB/dev | "
+              "collective MiB/dev |")
+        print("|---|---|---|---|---|")
+        for r in rows:
+            print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f} | "
+                  f"{r['peak_bytes_per_device']/2**30:.2f} | "
+                  f"{r['collective_bytes_per_device']/2**20:.0f} |")
+        skips = sum(1 for r in rs if r.get("skipped"))
+        print(f"\ncompiled: {len(rows)}; skipped (documented): {skips}")
+
+
+def roofline_table():
+    rs = _load("roofline.json")
+    if not rs:
+        return
+    rows = [r for r in rs if "dominant" in r]
+    print("\n### Roofline (single-pod, per step)\n")
+    print("| arch | shape | compute s | memory s | collective s | dominant "
+          "| MODEL_FLOPS | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+              f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+              f"{r['dominant']} | {r['model_flops']:.3g} | "
+              f"{r['useful_ratio']:.3f} | {r['roofline_frac']:.4f} |")
+
+
+def perf_tables():
+    for name, title in (("hillclimb_granite.json",
+                         "Perf cell A: granite-moe train_4k"),
+                        ("hillclimb_decode.json",
+                         "Perf cell B: decode weight streaming"),
+                        ("fedat_mix_isolated.json",
+                         "Perf cell C: FedAT cross-tier sync "
+                         "(MiB/device/sync by bits)")):
+        data = _load(name)
+        if not data:
+            continue
+        print(f"\n### {title}\n")
+        if name.startswith("fedat"):
+            print("| bits | MiB/device |")
+            print("|---|---|")
+            for bits, b in data.items():
+                print(f"| {bits or 'f32'} | {b/2**20:.1f} |")
+            continue
+        print("| iteration | C ms | M ms | N ms | dominant | roofline |")
+        print("|---|---|---|---|---|---|")
+        for tag, r in data.items():
+            print(f"| {tag} | {r['compute_s']*1e3:.1f} | "
+                  f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+                  f"{r['dominant']} | {r['roofline_frac']:.4f} |")
+
+
+def main():
+    dryrun_tables()
+    roofline_table()
+    perf_tables()
+
+
+if __name__ == "__main__":
+    main()

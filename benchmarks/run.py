@@ -1,0 +1,232 @@
+"""Benchmark harness: one function per paper table/figure + kernel benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (derived = the headline
+quantity for that table: accuracy, MB, ratio, ...).  Budget-aware: table
+benches use a reduced but structurally faithful setup (synthetic non-IID
+data, 40 clients / 5 tiers, the paper's delay bands & dropout).
+
+  PYTHONPATH=src python -m benchmarks.run           # everything
+  PYTHONPATH=src python -m benchmarks.run table1 fig5 kernels
+"""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import BaselineConfig, run_fedavg, run_fedasync, \
+    run_tifl
+from repro.core.fedat import FedATConfig, measure_ratio, run_fedat
+from repro.core.simulation import SimConfig, SimEnv
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us: float, derived: str):
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _env(classes_per_client=2, seed=0, n_clients=40):
+    return SimEnv(SimConfig(
+        n_clients=n_clients, n_tiers=5, classes_per_client=classes_per_client,
+        samples_per_client=40, image_hw=8, clients_per_round=8,
+        local_epochs=2, n_unstable=4, seed=seed))
+
+
+_BUDGET = dict(total_updates=120, eval_every=15)
+_BBUDGET = dict(total_updates=60, eval_every=15)
+
+
+def table1_accuracy():
+    """Table 1: best accuracy + per-client accuracy variance, per method,
+    across non-IID levels."""
+    for ncls in (2, 4, 10):  # 10 == iid
+        env = _env(classes_per_client=ncls)
+        t0 = time.perf_counter()
+        mf = run_fedat(env, FedATConfig(**_BUDGET))
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"table1/fedat/cls{ncls}", us / _BUDGET["total_updates"],
+             f"acc={mf.best_acc:.3f};var={mf.acc_var[-1]:.5f}")
+        for name, fn in (("fedavg", run_fedavg), ("tifl", run_tifl),
+                         ("fedasync", run_fedasync)):
+            t0 = time.perf_counter()
+            m = fn(env, BaselineConfig(**_BBUDGET))
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"table1/{name}/cls{ncls}", us / _BBUDGET["total_updates"],
+                 f"acc={m.best_acc:.3f};var={m.acc_var[-1]:.5f}")
+
+
+def table2_comm_cost():
+    """Table 2: MB transferred to reach a target accuracy (2-class)."""
+    env = _env(2)
+    target = 0.45
+    runs = {
+        "fedat": run_fedat(env, FedATConfig(**_BUDGET)),
+        "fedavg": run_fedavg(env, BaselineConfig(**_BBUDGET)),
+        "tifl": run_tifl(env, BaselineConfig(**_BBUDGET)),
+        "fedasync": run_fedasync(env, BaselineConfig(**_BBUDGET)),
+    }
+    for name, m in runs.items():
+        b = m.bytes_to_accuracy(target)
+        emit(f"table2/{name}", 0.0,
+             f"mb_to_{target}={'%.1f' % (b/1e6) if b else 'n/a'};"
+             f"total_mb={(m.bytes_up[-1]+m.bytes_down[-1])/1e6:.1f}")
+
+
+def fig2_time_to_accuracy():
+    """Fig. 2: simulated wall-clock to target accuracy."""
+    env = _env(2, seed=1)
+    target = 0.40
+    runs = {
+        "fedat": run_fedat(env, FedATConfig(total_updates=120,
+                                            eval_every=10)),
+        "fedavg": run_fedavg(env, BaselineConfig(total_updates=60,
+                                                 eval_every=10)),
+        "tifl": run_tifl(env, BaselineConfig(total_updates=60,
+                                             eval_every=10)),
+        "fedasync": run_fedasync(env, BaselineConfig(total_updates=120,
+                                                     eval_every=10)),
+    }
+    tf = runs["fedat"].time_to_accuracy(target)
+    for name, m in runs.items():
+        t = m.time_to_accuracy(target)
+        rel = (t / tf) if (t and tf) else float("nan")
+        emit(f"fig2/{name}", 0.0,
+             f"sim_s_to_{target}={'%.0f' % t if t else 'n/a'};"
+             f"x_vs_fedat={rel:.2f}")
+
+
+def fig5_precision_tradeoff():
+    """Fig. 5: compression precision vs accuracy + bytes."""
+    env = _env(2, seed=2)
+    for prec in (3, 4, 6, None):
+        m = run_fedat(env, FedATConfig(precision=prec, **_BUDGET))
+        total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
+        emit(f"fig5/precision_{prec}", 0.0,
+             f"acc={m.best_acc:.3f};total_mb={total_mb:.1f}")
+
+
+def fig6_weighted_aggregation():
+    """Fig. 6: Eq. 3 weighted aggregation vs uniform."""
+    env = _env(2, seed=3)
+    mw = run_fedat(env, FedATConfig(weighted=True, **_BUDGET))
+    mu = run_fedat(env, FedATConfig(weighted=False, **_BUDGET))
+    emit("fig6/weighted", 0.0, f"acc={mw.best_acc:.3f}")
+    emit("fig6/uniform", 0.0, f"acc={mu.best_acc:.3f}")
+    emit("fig6/delta", 0.0, f"impr={(mw.best_acc-mu.best_acc):.3f}")
+
+
+def fig7_participation():
+    """Fig. 7 (appendix B.1): client participation level."""
+    for cpr in (2, 8):
+        env = SimEnv(SimConfig(
+            n_clients=40, n_tiers=5, classes_per_client=2,
+            samples_per_client=40, image_hw=8, clients_per_round=cpr,
+            local_epochs=2, n_unstable=4, seed=4))
+        mf = run_fedat(env, FedATConfig(**_BUDGET))
+        ma = run_fedavg(env, BaselineConfig(**_BBUDGET))
+        emit(f"fig7/k{cpr}", 0.0,
+             f"fedat={mf.best_acc:.3f};fedavg={ma.best_acc:.3f}")
+
+
+def codec():
+    """Compression ratio of the faithful polyline codec + the TPU codec."""
+    rng = np.random.default_rng(0)
+    w = {"w": rng.normal(0, 0.05, 100_000).astype(np.float32)}
+    for prec in (3, 4, 6):
+        t0 = time.perf_counter()
+        r = measure_ratio(w, prec)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"codec/polyline_p{prec}", us, f"ratio_vs_f32={1/r:.2f}x")
+    from repro.compress import quantize
+    x = jnp.asarray(w["w"])
+    for bits in (8, 16):
+        c = quantize.compress(x, bits)
+        ratio = x.size * 4 / quantize.wire_bytes(c)
+        emit(f"codec/quantize_int{bits}", 0.0, f"ratio_vs_f32={ratio:.2f}x")
+
+
+def kernels():
+    """Kernel microbenches (interpret mode: correctness-path timing only)."""
+    from repro.kernels import ops
+    key = jax.random.PRNGKey(0)
+
+    def bench(fn, *args, n=3):
+        fn(*args)  # compile
+        t0 = time.perf_counter()
+        for _ in range(n):
+            jax.block_until_ready(fn(*args))
+        return (time.perf_counter() - t0) / n * 1e6
+
+    x = jax.random.normal(key, (262_144,))
+    us = bench(lambda a: ops.compress(a, 8), x)
+    emit("kernels/codec_compress_256k", us, "interpret=True")
+    q, s = ops.compress(x, 8)
+    us = bench(lambda a, b: ops.decompress(a, b, (262_144,)), q, s)
+    emit("kernels/codec_decompress_256k", us, "interpret=True")
+
+    q4 = jax.random.normal(key, (1, 256, 4, 64))
+    k4 = jax.random.normal(key, (1, 256, 4, 64))
+    us = bench(lambda a, b, c: ops.flash_attention(a, b, c), q4, k4, k4)
+    emit("kernels/flash_attn_256", us, "interpret=True")
+
+    r = jax.random.normal(key, (4, 256, 64))
+    lw = -jnp.exp(jax.random.normal(key, (4, 256, 64)))
+    u = jax.random.normal(key, (4, 64))
+    us = bench(lambda a, b, c, d, e: ops.wkv6(a, b, c, d, e), r, r, r, lw, u)
+    emit("kernels/wkv6_256", us, "interpret=True")
+
+    xs = jax.random.normal(key, (4, 256, 64))
+    bm = jax.random.normal(key, (4, 256, 32))
+    da = -jnp.abs(jax.random.normal(key, (4, 256, 1)))
+    us = bench(lambda a, b, c, d: ops.ssd(a, b, c, d), xs, bm, bm, da)
+    emit("kernels/ssd_256", us, "interpret=True")
+
+
+def trainer():
+    """Smoke-scale trainer + server throughput (CPU)."""
+    from repro.launch import train as train_mod
+    t0 = time.perf_counter()
+    train_mod.main(["--arch", "qwen2-7b", "--smoke", "--steps", "6",
+                    "--ckpt-dir", "/tmp/bench_ck"])
+    us = (time.perf_counter() - t0) / 6 * 1e6
+    emit("trainer/single_smoke_step", us, "arch=qwen2-7b-smoke")
+    from repro.launch import serve as serve_mod
+    t0 = time.perf_counter()
+    done = serve_mod.main(["--arch", "rwkv6-3b", "--smoke", "--requests",
+                           "4", "--slots", "4", "--prompt-len", "16",
+                           "--max-new", "8"])
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out) for r in done)
+    emit("server/decode_smoke", dt / max(toks, 1) * 1e6,
+         f"tokens={toks};arch=rwkv6-smoke")
+
+
+ALL = {
+    "table1": table1_accuracy,
+    "table2": table2_comm_cost,
+    "fig2": fig2_time_to_accuracy,
+    "fig5": fig5_precision_tradeoff,
+    "fig6": fig6_weighted_aggregation,
+    "fig7": fig7_participation,
+    "codec": codec,
+    "kernels": kernels,
+    "trainer": trainer,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(ALL)
+    print("name,us_per_call,derived")
+    for name in which:
+        ALL[name]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Quickstart: FedAT vs FedAvg on synthetic non-IID data in ~2 minutes (CPU).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core.baselines import BaselineConfig, run_fedavg
+from repro.core.fedat import FedATConfig, run_fedat
+from repro.core.simulation import SimConfig, SimEnv
+
+
+def main():
+    # 20 clients, 4 latency tiers (the paper's delay bands), 2-class non-IID
+    env = SimEnv(SimConfig(n_clients=20, n_tiers=4, classes_per_client=2,
+                           samples_per_client=40, image_hw=8,
+                           clients_per_round=5, local_epochs=2,
+                           n_unstable=2))
+    print(f"tiers: {[len(m) for m in env.tm.members]} clients each; "
+          f"latencies {env.tm.latencies.min():.1f}..{env.tm.latencies.max():.1f}s")
+
+    fedat = run_fedat(env, FedATConfig(total_updates=60, eval_every=10))
+    fedavg = run_fedavg(env, BaselineConfig(total_updates=40, eval_every=10))
+
+    print("\n              acc    var      sim-time  MB")
+    for name, m in (("FedAT", fedat), ("FedAvg", fedavg)):
+        s = m.summary()
+        print(f"  {name:8s} {s['best_acc']:.3f}  {s['final_var']:.4f}  "
+              f"{s['sim_time']:8.0f}s  {s['total_mb']:6.1f}")
+    t = 0.35
+    tf, ta = fedat.time_to_accuracy(t), fedavg.time_to_accuracy(t)
+    if tf and ta:
+        print(f"\n  time to {t:.0%} accuracy: FedAT {tf:.0f}s vs "
+              f"FedAvg {ta:.0f}s  ({ta / tf:.1f}x faster)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with the
+FedAT multi-pod step (pods-as-tiers), fault injection, checkpoint/resume.
+
+    PYTHONPATH=src python examples/tiered_pretrain.py [--steps 200]
+
+On CPU this uses a ~100M-param qwen2-style config at short sequence length;
+on a real cluster the same driver takes --arch qwen2-7b --shape train_4k.
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import TrainConfig
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.checkpoint import CheckpointManager
+from repro.core import steps as steps_mod
+from repro.data.pipeline import TokenPipeline
+from repro.launch.mesh import make_host_mesh
+from repro.runtime import sharding as shd
+from repro.runtime.fault import GuardedRunner
+
+
+def make_config(d_model: int, n_layers: int) -> ModelConfig:
+    # --full => ~100M params (12L, d=768, ff=2048, vocab 32k); the default
+    # ~14M variant keeps the example CPU-friendly (same code path).
+    heads = max(d_model // 64, 1)
+    kv = 4 if heads % 4 == 0 else heads
+    return ModelConfig(name=f"lm-{n_layers}x{d_model}", family="dense",
+                       n_layers=n_layers, d_model=d_model,
+                       n_heads=heads, n_kv_heads=kv,
+                       head_dim=64, d_ff=int(d_model * 8 / 3) // 64 * 64,
+                       vocab_size=32000 if d_model >= 768 else 8192,
+                       attn_chunk=256)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params (use on real hardware)")
+    ap.add_argument("--ckpt-dir", default="/tmp/tiered_pretrain")
+    args = ap.parse_args()
+
+    cfg = make_config(768, 12) if args.full else make_config(320, 6)
+    print(f"model: {cfg.param_count()/1e6:.0f}M params")
+    shape = ShapeConfig("example", args.seq, args.batch, "train")
+    tcfg = TrainConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps,
+                       fedat_enabled=True, fedat_sync_every=4,
+                       fedat_compress_bits=8)
+    mesh = make_host_mesh(n_pods=2)
+    multi = "pod" in mesh.shape
+    n_pods = mesh.shape.get("pod", 1)
+    print(f"mesh: {dict(mesh.shape)} (fedat multi-pod: {multi})")
+
+    with mesh, shd.use_mesh(mesh):
+        fns = (steps_mod.make_fedat_step if multi else
+               steps_mod.make_single_pod_step)(cfg, tcfg, mesh)
+        step_fn = jax.jit(fns.train_step,
+                          in_shardings=(fns.state_shardings,
+                                        fns.batch_shardings),
+                          out_shardings=(fns.state_shardings, None))
+        state = jax.jit(fns.init_state,
+                        out_shardings=fns.state_shardings)(
+            jax.random.PRNGKey(0))
+
+        pipe = TokenPipeline(cfg, shape)
+        ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+        def batches():
+            s = 0
+            while True:
+                b = pipe.batch(s)
+                if multi:
+                    b = steps_mod.split_batch_for_pods(b, n_pods)
+                yield b
+                s += 1
+
+        losses = []
+
+        def on_metrics(step, m):
+            losses.append(float(m["loss"]))
+            if step % 20 == 0:
+                print(f"  step {step:4d}  loss {losses[-1]:.4f}")
+
+        runner = GuardedRunner(step_fn, ckpt, ckpt_every=50,
+                               inject_failure_rate=0.01, seed=0)
+        t0 = time.time()
+        state, end = runner.run(state, batches(), args.steps,
+                                on_metrics=on_metrics)
+        dt = time.time() - t0
+    print(f"\ntrained {end} steps in {dt:.0f}s ({dt/end:.2f}s/step); "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+          f"runner stats {runner.stats}")
+    assert losses[-1] < losses[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.compress import polyline, quantize  # noqa: F401

@@ -1,0 +1,111 @@
+"""TPU-native compression codec (the polyline adaptation, DESIGN.md §HW).
+
+The paper's polyline encoder is an ASCII varint stream — pointer-chasing,
+variable-length, and hostile to vector units.  Its *information content* is
+"keep ~`precision` decimal digits of each weight".  The TPU-native analogue
+implemented here is blockwise fixed-point quantization:
+
+  * split the flat weight vector into blocks of 256,
+  * per-block scale s = max|x| / qmax  (qmax = 127 for int8, 32767 for int16),
+  * q = round(x / s) stored as int8/int16, s as f32 (1/256 overhead).
+
+Max error per weight is s/2 <= max|block| / (2*qmax) — the analogue of the
+polyline bound 0.5*10^-p, but *relative* to the block range, which tracks
+the paper's observation that non-i.i.d. weight divergence breaks fixed
+absolute precision.  Everything is jnp, so it jits, vmaps over clients, and
+runs *inside* the cross-tier collective (the pod-axis all-reduce moves int8,
+cutting the collective roofline term ~4x vs f32 — see EXPERIMENTS.md §Perf).
+
+A Pallas TPU kernel of the same codec lives in kernels/polyline_codec.py.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jax.Array        # (n_blocks, BLOCK) int8/int16 (zero-padded tail)
+    scale: jax.Array    # (n_blocks,) f32
+    size: int           # original flat length
+    # original shape travels out-of-band (tree metadata), like the paper's
+    # "dimensions of the weights of each layer are transmitted as well".
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def compress(x: jax.Array, bits: int = 8) -> Compressed:
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    nb = -(-n // BLOCK)
+    flat = jnp.pad(flat, (0, nb * BLOCK - n))
+    blocks = flat.reshape(nb, BLOCK)
+    qmax = _qmax(bits)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -qmax, qmax).astype(dtype)
+    return Compressed(q=q, scale=scale.astype(jnp.float32), size=n)
+
+
+def decompress(c: Compressed, shape: Tuple[int, ...], dtype=jnp.float32
+               ) -> jax.Array:
+    flat = (c.q.astype(jnp.float32) * c.scale[:, None]).reshape(-1)[:c.size]
+    return flat.reshape(shape).astype(dtype)
+
+
+def wire_bytes(c: Compressed) -> int:
+    return int(c.q.size * c.q.dtype.itemsize + c.scale.size * 4)
+
+
+# ---------------------------------------------------------------------------
+# pytree codec (uplink/downlink payloads)
+# ---------------------------------------------------------------------------
+
+def compress_tree(tree: Any, bits: int = 8):
+    leaves, treedef = jax.tree.flatten(tree)
+    comps = [compress(l, bits) for l in leaves]
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    return {"comps": comps, "shapes": shapes, "dtypes": dtypes,
+            "treedef": treedef}
+
+
+def decompress_tree(msg) -> Any:
+    leaves = [decompress(c, s, d) for c, s, d in
+              zip(msg["comps"], msg["shapes"], msg["dtypes"])]
+    return jax.tree.unflatten(msg["treedef"], leaves)
+
+
+def tree_wire_bytes(msg) -> int:
+    return sum(wire_bytes(c) for c in msg["comps"]) + 8 * len(msg["shapes"])
+
+
+# ---------------------------------------------------------------------------
+# in-graph codec for compressed collectives (jit-friendly, fixed shapes)
+# ---------------------------------------------------------------------------
+
+def fake_quantize(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Quantize-dequantize in-graph (straight-through values).
+
+    Used to model the paper's lossy link inside a jitted train step: the
+    cross-tier aggregation operates on codec-roundtripped weights, and the
+    collective itself can be performed on the int payload.
+    """
+    return decompress(compress(x, bits), x.shape, x.dtype)
+
+
+def error_bound(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Per-block worst-case absolute error of the codec."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    nb = -(-n // BLOCK)
+    flat = jnp.pad(flat, (0, nb * BLOCK - n))
+    blocks = flat.reshape(nb, BLOCK)
+    return jnp.max(jnp.abs(blocks), axis=1) / _qmax(bits) * 0.5

@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, RWKVConfig, TrainConfig  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeConfig, applicable, smoke_shape  # noqa: F401

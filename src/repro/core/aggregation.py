@@ -1,0 +1,55 @@
+"""Cross-tier weighted aggregation (FedAT Eq. 3 / Algorithm 1).
+
+With per-tier update counts T_1..T_M (total T), tier m gets weight
+
+    w_m = T_{M+1-m} / T
+
+i.e. the *slowest* tier inherits the *fastest* tier's update count: tiers
+that update rarely are up-weighted exactly by how often the mirror-image
+fast tier updated, so the global model does not drift toward fast tiers.
+Weights sum to 1 by construction.  Until the first update (T == 0) the
+initial model is returned unchanged (Algorithm 1's t == 0 branch).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def cross_tier_weights(update_counts: jax.Array) -> jax.Array:
+    """update_counts: (M,) int -> (M,) weights, reversed-count normalized."""
+    counts = jnp.asarray(update_counts, jnp.float32)
+    total = jnp.sum(counts)
+    rev = counts[::-1]
+    uniform = jnp.full_like(rev, 1.0 / rev.shape[0])
+    return jnp.where(total > 0, rev / jnp.maximum(total, 1.0), uniform)
+
+
+def uniform_weights(n_tiers: int) -> jax.Array:
+    return jnp.full((n_tiers,), 1.0 / n_tiers, jnp.float32)
+
+
+def weighted_average(stacked_models: Any, weights: jax.Array) -> Any:
+    """stacked_models: pytree with leading dim M -> weighted mean pytree."""
+    def avg(leaf):
+        w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(leaf.astype(jnp.float32) * w, axis=0).astype(leaf.dtype)
+    return jax.tree.map(avg, stacked_models)
+
+
+def intra_tier_average(client_models: Any, n_samples: jax.Array) -> Any:
+    """FedAvg within a tier (Eq. 4): weight client k by n_k / N_c.
+
+    client_models: pytree with leading dim = #selected clients.
+    """
+    w = n_samples.astype(jnp.float32)
+    w = w / jnp.maximum(jnp.sum(w), 1.0)
+    return weighted_average(client_models, w)
+
+
+def global_model(tier_models: Any, update_counts) -> Any:
+    """WeightedAverage() from Algorithm 1."""
+    return weighted_average(tier_models, cross_tier_weights(update_counts))

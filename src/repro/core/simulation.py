@@ -1,0 +1,133 @@
+"""Shared simulation environment for all FL methods (paper §6.1 setup).
+
+100 clients on synthetic non-i.i.d. data; latency profile with the paper's
+five delay bands; 10 "unstable" clients that drop out permanently at a
+random time; fixed seeds so every method sees identical partitions,
+latencies, and dropout schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiering
+from repro.core.clients import make_client_update, make_eval_fn
+from repro.data.federated import FederatedDataset, make_federated, pad_stack
+from repro.models import cnn
+
+PAPER_DELAY_BANDS = ((0.0, 0.0), (0.0, 5.0), (6.0, 10.0), (11.0, 15.0),
+                     (20.0, 30.0))
+
+
+@dataclasses.dataclass
+class SimConfig:
+    task: str = "image"            # image (CNN) | text (logreg)
+    n_clients: int = 100
+    n_classes: int = 10
+    classes_per_client: int = 2
+    samples_per_client: int = 60
+    image_hw: int = 12
+    n_features: int = 128
+    n_tiers: int = 5
+    clients_per_round: int = 10
+    local_epochs: int = 3
+    batch_size: int = 10
+    lr: float = 1e-3
+    prox_lambda: float = 0.4
+    n_unstable: int = 10
+    base_compute: float = 1.0      # seconds per local round before delays
+    seed: int = 0
+
+
+class SimEnv:
+    def __init__(self, sc: SimConfig):
+        self.sc = sc
+        rng = np.random.default_rng(sc.seed)
+        self.rng = rng
+        self.ds = make_federated(
+            task=sc.task, n_clients=sc.n_clients, n_classes=sc.n_classes,
+            classes_per_client=sc.classes_per_client,
+            samples_per_client=sc.samples_per_client, image_hw=sc.image_hw,
+            n_features=sc.n_features, seed=sc.seed)
+        self.train = pad_stack(self.ds)
+        self.test = self._stack_test()
+
+        # latency profile -> tiers (paper: 5 delay bands on top of compute)
+        base = np.full(sc.n_clients, sc.base_compute)
+        lat = tiering.profile_latencies(base, PAPER_DELAY_BANDS, rng)
+        self.tm = tiering.assign_tiers(lat, sc.n_tiers)
+
+        # 10 unstable clients drop permanently at a random time
+        self.dropout_ids = rng.choice(sc.n_clients, sc.n_unstable,
+                                      replace=False)
+        self.dropout_time = {int(c): float(rng.uniform(50, 400))
+                             for c in self.dropout_ids}
+
+        # model + jitted client update / eval
+        key = jax.random.PRNGKey(sc.seed)
+        if sc.task == "image":
+            self.params0, self.apply_fn = cnn.make_model(
+                "cnn", key, in_shape=self.ds.input_shape,
+                n_classes=sc.n_classes)
+        else:
+            self.params0, self.apply_fn = cnn.make_model(
+                "logreg", key, n_features=sc.n_features,
+                n_classes=sc.n_classes)
+        self.update_fn = make_client_update(
+            self.apply_fn, local_epochs=sc.local_epochs,
+            batch_size=sc.batch_size, lr=sc.lr,
+            prox_lambda=sc.prox_lambda)
+        self.update_fn_noprox = make_client_update(
+            self.apply_fn, local_epochs=sc.local_epochs,
+            batch_size=sc.batch_size, lr=sc.lr, prox_lambda=0.0)
+        self.eval_fn = make_eval_fn(self.apply_fn)
+        self.model_bytes = sum(np.asarray(l).nbytes
+                               for l in jax.tree.leaves(self.params0))
+
+    def _stack_test(self):
+        cap = max(len(c.y_test) for c in self.ds.clients)
+        n = self.ds.n_clients
+        xs = np.zeros((n, cap) + self.ds.input_shape, np.float32)
+        ys = np.zeros((n, cap), np.int32)
+        mask = np.zeros((n, cap), bool)
+        for i, c in enumerate(self.ds.clients):
+            k = len(c.y_test)
+            xs[i, :k] = c.x_test
+            ys[i, :k] = c.y_test
+            mask[i, :k] = True
+        return {"x": xs, "y": ys, "mask": mask}
+
+    # ------------------------------------------------------------------
+    def alive(self, now: float) -> np.ndarray:
+        out = np.ones(self.sc.n_clients, bool)
+        for c, t in self.dropout_time.items():
+            if now >= t:
+                out[c] = False
+        return out
+
+    def sample_clients(self, pool: np.ndarray, k: int,
+                       rng: np.random.Generator) -> np.ndarray:
+        if len(pool) == 0:
+            return pool
+        k = min(k, len(pool))
+        return rng.choice(pool, k, replace=False)
+
+    def client_batch(self, ids: np.ndarray) -> Dict[str, jnp.ndarray]:
+        return {k: jnp.asarray(self.train[k][ids])
+                for k in ("x", "y", "mask")}
+
+    def n_samples(self, ids: np.ndarray) -> jnp.ndarray:
+        return jnp.asarray(self.train["n_samples"][ids])
+
+    def evaluate(self, params) -> Tuple[float, float]:
+        """(weighted global accuracy, per-client accuracy variance)."""
+        accs = np.asarray(self.eval_fn(params, jnp.asarray(self.test["x"]),
+                                       jnp.asarray(self.test["y"]),
+                                       jnp.asarray(self.test["mask"])))
+        weights = self.test["mask"].sum(1)
+        glob = float((accs * weights).sum() / weights.sum())
+        return glob, float(np.var(accs))

@@ -1,0 +1,3 @@
+from repro.data.federated import (  # noqa: F401
+    ClientData, FederatedDataset, global_test_set, make_federated, pad_stack)
+from repro.data.pipeline import TokenPipeline  # noqa: F401

@@ -1,0 +1,74 @@
+"""Deterministic synthetic LM data pipeline for the large-model drivers.
+
+Generates token streams from a seeded Markov-ish process (cheap, infinite,
+reproducible across restarts via the step counter — resuming from a
+checkpoint replays the exact stream position).  Provides host-side batching
+with prefetch and per-shape batch builders matching lm.input_specs().
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+
+
+class TokenPipeline:
+    """Stateless-per-step synthetic token source: batch(step) is pure."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+
+    def batch(self, step: int) -> Dict[str, np.ndarray]:
+        cfg, shape = self.cfg, self.shape
+        rng = np.random.default_rng((self.seed, step))
+        B, S = shape.global_batch, shape.seq_len
+        if cfg.family == "vlm":
+            np_ = min(cfg.n_frontend_tokens, S // 2)
+            return {
+                "patch_embeds": rng.normal(
+                    0, 1, (B, np_, cfg.d_model)).astype(np.float32),
+                "tokens": rng.integers(
+                    0, cfg.vocab_size, (B, S - np_)).astype(np.int32),
+            }
+        if cfg.family == "audio":
+            mask = rng.random((B, S)) < 0.08
+            return {
+                "frames": rng.normal(0, 1, (B, S, cfg.d_model)).astype(
+                    np.float32),
+                "labels": rng.integers(0, cfg.vocab_size, (B, S)).astype(
+                    np.int32),
+                "mask": mask,
+            }
+        return {"tokens": rng.integers(
+            0, cfg.vocab_size, (B, S)).astype(np.int32)}
+
+    def iterator(self, start_step: int = 0, prefetch: int = 2
+                 ) -> Iterator[Dict[str, np.ndarray]]:
+        """Background-thread prefetching iterator (overlaps host datagen
+        with device compute)."""
+        q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        stop = threading.Event()
+
+        def worker():
+            step = start_step
+            while not stop.is_set():
+                try:
+                    q.put(self.batch(step), timeout=0.5)
+                    step += 1
+                except queue.Full:
+                    continue
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()

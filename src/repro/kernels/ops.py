@@ -1,0 +1,112 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles shape massaging (padding to tile multiples, flattening batch/head
+dims), exposes ``interpret=`` for CPU validation, and provides ``use_ref``
+fallbacks so the same call sites run on non-TPU backends.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import polyline_codec as codec
+from repro.kernels import ref
+from repro.kernels import rwkv6_scan
+from repro.kernels import ssd as ssd_mod
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    n = x.shape[axis]
+    target = -(-n // mult) * mult
+    if target == n:
+        return x, n
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - n)
+    return jnp.pad(x, pad), n
+
+
+# --- codec -------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def compress(x: jax.Array, bits: int = 8, interpret: bool = True):
+    """x: any shape -> (q (nb,256) int, scale (nb,1) f32, orig size)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    tile = codec.BLOCK * codec.TILE_B
+    flat, _ = _pad_to(flat, 0, tile)
+    blocks = flat.reshape(-1, codec.BLOCK)
+    q, scale = codec.compress_blocks(blocks, bits, interpret=interpret)
+    return q, scale
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "interpret"))
+def decompress(q, scale, shape: Tuple[int, ...], interpret: bool = True):
+    blocks = codec.decompress_blocks(q, scale, interpret=interpret)
+    n = 1
+    for s in shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+# --- attention ---------------------------------------------------------------
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "interpret"))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None, interpret: bool = True):
+    """q: (B, S, H, hd); k/v: (B, T, KV, hd) with H % KV == 0 (GQA).
+    Returns (B, S, H, hd)."""
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    # expand KV heads to query heads, flatten (B, H) -> BH
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, T, hd)
+    qf, S0 = _pad_to(qf, 1, fa.BQ)
+    kf, T0 = _pad_to(kf, 1, fa.BK)
+    vf, _ = _pad_to(vf, 1, fa.BK)
+    hd_pad = -(-hd // 128) * 128
+    if hd_pad != hd:
+        qf, _ = _pad_to(qf, 2, 128)
+        kf, _ = _pad_to(kf, 2, 128)
+        vf, _ = _pad_to(vf, 2, 128)
+    out = fa.flash_attention(qf, kf, vf, causal=causal, window=window,
+                             interpret=interpret,
+                             scale=1.0 / (hd ** 0.5), kv_len=T0)
+    out = out[:, :S0, :hd]
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+# --- wkv6 ---------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, chunk: int = 64, interpret: bool = True):
+    """r/k/v/logw: (BH, S, N); u: (BH, N) -> y (BH, S, N)."""
+    S = r.shape[1]
+    rp, _ = _pad_to(r, 1, chunk)
+    kp, _ = _pad_to(k, 1, chunk)      # k = 0 on padding: no state effect
+    vp, _ = _pad_to(v, 1, chunk)
+    lp, _ = _pad_to(logw, 1, chunk)   # logw = 0: decay 1 on padding
+    y = rwkv6_scan.wkv6(rp, kp, vp, lp, u, chunk=chunk, interpret=interpret)
+    return y[:, :S]
+
+
+# --- ssd ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, Bm, Cm, da, chunk: int = 64, interpret: bool = True):
+    """x: (BH, S, P); Bm/Cm: (BH, S, N); da: (BH, S, 1) -> y (BH, S, P)."""
+    S = x.shape[1]
+    xp, _ = _pad_to(x, 1, chunk)
+    bp, _ = _pad_to(Bm, 1, chunk)
+    cp, _ = _pad_to(Cm, 1, chunk)
+    dp, _ = _pad_to(da, 1, chunk)
+    y = ssd_mod.ssd_scan(xp, bp, cp, dp, chunk=chunk, interpret=interpret)
+    return y[:, :S]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel for the blockwise quantization codec (the TPU-native
+polyline-encoding analogue, DESIGN.md §Hardware-adaptation).
+
+compress:   x (n, 256) f32/bf16 -> q (n, 256) int8|int16, scale (n, 1) f32
+decompress: inverse.
+
+Tiling: TILE_B logical 256-blocks per grid step -> VMEM tiles of
+(TILE_B, 256).  256 = 2 TPU lanes x 128; the per-block max reduction runs
+on the VPU along the lane dim, the scale broadcast hits the MXU-free path.
+This is the hot loop of FedAT's cross-tier sync (quantize -> pod collective
+-> dequantize), so keeping it bandwidth-bound at ~1 byte out per 4 bytes in
+is the design goal (see benchmarks/kernel_bench.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256     # codec block (matches compress/quantize.py)
+TILE_B = 8      # codec blocks per grid step -> (8, 256) VMEM tiles
+
+
+def _qmax(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+def _compress_kernel(x_ref, q_ref, s_ref, *, bits: int):
+    x = x_ref[...].astype(jnp.float32)                     # (TILE_B, 256)
+    qmax = float(_qmax(bits))
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True) / qmax
+    scale = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    q_ref[...] = q.astype(q_ref.dtype)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+def _decompress_kernel(q_ref, s_ref, x_ref):
+    q = q_ref[...].astype(jnp.float32)
+    s = s_ref[...].astype(jnp.float32)                     # (TILE_B, 1)
+    x_ref[...] = (q * s).astype(x_ref.dtype)
+
+
+def compress_blocks(x: jax.Array, bits: int = 8, interpret: bool = False):
+    """x: (n_blocks, 256) -> (q (n_blocks, 256) int, scale (n_blocks, 1))."""
+    n = x.shape[0]
+    assert x.shape[1] == BLOCK and n % TILE_B == 0, x.shape
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    grid = (n // TILE_B,)
+    return pl.pallas_call(
+        functools.partial(_compress_kernel, bits=bits),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_B, BLOCK), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((TILE_B, BLOCK), lambda i: (i, 0)),
+                   pl.BlockSpec((TILE_B, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, BLOCK), dtype),
+                   jax.ShapeDtypeStruct((n, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)
+
+
+def decompress_blocks(q: jax.Array, scale: jax.Array, out_dtype=jnp.float32,
+                      interpret: bool = False) -> jax.Array:
+    n = q.shape[0]
+    assert q.shape[1] == BLOCK and n % TILE_B == 0, q.shape
+    grid = (n // TILE_B,)
+    return pl.pallas_call(
+        _decompress_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE_B, BLOCK), lambda i: (i, 0)),
+                  pl.BlockSpec((TILE_B, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_B, BLOCK), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, BLOCK), out_dtype),
+        interpret=interpret,
+    )(q, scale)

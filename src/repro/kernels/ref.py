@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Deliberately naive implementations: full logits matrices, token-level
+recurrent scans — slow but obviously correct.  tests/test_kernels.py sweeps
+shapes and dtypes asserting kernel ~= oracle in interpret mode.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# --- codec -----------------------------------------------------------------
+
+def compress_blocks(x: jax.Array, bits: int = 8):
+    qmax = (1 << (bits - 1)) - 1
+    dtype = jnp.int8 if bits <= 8 else jnp.int16
+    scale = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32)), axis=1,
+                                keepdims=True) / qmax, 1e-30)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -qmax,
+                 qmax).astype(dtype)
+    return q, scale.astype(jnp.float32)
+
+
+def decompress_blocks(q: jax.Array, scale: jax.Array, out_dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+# --- attention ---------------------------------------------------------------
+
+def attention(q, k, v, causal=True, window=None):
+    """q: (BH, S, hd); k/v: (BH, T, hd) -> (BH, S, hd). Full materialized."""
+    S, T = q.shape[1], k.shape[1]
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bst,bth->bsh", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# --- wkv6 -------------------------------------------------------------------
+
+def wkv6(r, k, v, logw, u):
+    """Token-level recurrence (the definitional form). All: (BH, S, N)."""
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = logw.astype(jnp.float32)
+    u32 = u.astype(jnp.float32)
+    BH, S, N = r.shape
+
+    def step(state, xs):
+        rt, kt, vt, lwt = xs
+        kv = kt[:, :, None] * vt[:, None, :]              # (BH, N, N)
+        y = jnp.einsum("bi,bij->bj", rt,
+                       state + u32[:, :, None] * kv)
+        state = jnp.exp(lwt)[:, :, None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r32, k32, v32, lw))
+    _, ys = jax.lax.scan(step, jnp.zeros((BH, N, N), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)
+
+
+# --- ssd --------------------------------------------------------------------
+
+def ssd(x, Bm, Cm, da):
+    """Token-level SSD recurrence. x: (BH,S,P); Bm/Cm: (BH,S,N);
+    da: (BH,S,1)."""
+    x32 = x.astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    da32 = da.astype(jnp.float32)
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(h, xs):
+        xt, bt, ct, dat = xs
+        h = jnp.exp(dat)[..., None] * h + \
+            jnp.einsum("bp,bn->bpn", xt, bt)
+        y = jnp.einsum("bn,bpn->bp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(B32, 1, 0),
+          jnp.moveaxis(C32, 1, 0), jnp.moveaxis(da32[..., 0], 1, 0)[..., None])
+    h0 = jnp.zeros((BH, P, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

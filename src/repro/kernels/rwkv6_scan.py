@@ -1,0 +1,77 @@
+"""WKV6 chunked-scan Pallas TPU kernel (RWKV-6 time-mix recurrence).
+
+Grid: (B*H, S/C) with the chunk dim iterated innermost (sequentially on
+TPU), carrying the (N, N) f32 state in VMEM scratch across chunk steps —
+the TPU idiom for linear-RNN scans: intra-chunk work is two (C, N) x (N, N)
+MXU matmuls plus a (C, C) masked decay kernel, and only the O(N^2) state
+crosses chunk boundaries (never written back to HBM between chunks).
+
+The intra-chunk decay matrix is exponentiated in *pairwise* log space
+(diff <= 0 before exp — the same stability trick as the jnp reference in
+models/rwkv6.py; a factorized exp overflows for strong decays).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, state,
+                *, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    r = r_ref[0].astype(jnp.float32)                      # (C, N)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    lw = lw_ref[0].astype(jnp.float32)                    # log decay <= 0
+    u = u_ref[0].astype(jnp.float32)                      # (1, N) bonus
+    S0 = state[...]
+
+    cum = jnp.cumsum(lw, axis=0)
+    cum_prev = cum - lw
+    # cross-chunk + intra-chunk (s < t) + diagonal bonus
+    rdec = r * jnp.exp(cum_prev)
+    y = rdec @ S0                                         # (C, N_v)
+    C = r.shape[0]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    mask = s_idx < t_idx
+    diff = cum_prev[:, None, :] - cum[None, :, :]         # (t, s, N)
+    diff = jnp.where(mask[:, :, None], diff, -jnp.inf)
+    att = jnp.einsum("ti,si,tsi->ts", r, k, jnp.exp(diff))
+    diag = jnp.sum(r * k * u, axis=1)
+    y = y + att @ v + diag[:, None] * v
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    dtot = jnp.exp(cum[-1:, :])                           # (1, N)
+    kdec = k * jnp.exp(cum[-1:, :] - cum)
+    state[...] = dtot.T * S0 + kdec.T @ v
+
+
+def wkv6(r, k, v, logw, u, chunk: int = 64, interpret: bool = False):
+    """r/k/v/logw: (BH, S, N); u: (BH, N). Returns y (BH, S, N).
+
+    S must be a multiple of ``chunk`` (ops.py pads).
+    """
+    BH, S, N = r.shape
+    assert S % chunk == 0, (S, chunk)
+    grid = (BH, S // chunk)
+    spec = pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[spec, spec, spec, spec,
+                  pl.BlockSpec((1, N), lambda b, c: (b, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((BH, S, N), r.dtype),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)

@@ -1,0 +1,72 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel (the Zamba2 backbone hot loop).
+
+Same carry-state-in-VMEM pattern as rwkv6_scan: grid (B*H, S/C) sequential
+over chunks, (P, N) f32 state in scratch.  Per chunk:
+
+    y  = (C_t . h) * exp(cum_t)  +  (C_t.B_s masked-decay kernel) @ x
+    h' = exp(cum_C) h + sum_s exp(cum_C - cum_s) x_s (x) B_s
+
+A is scalar per head (Mamba2), so the decay matrix is (C, C) — cheaper than
+WKV6's per-channel (C, C, N) tensor.  dt is pre-folded into x by the caller
+(ops.ssd_scan), matching models/mamba2.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, da_ref, y_ref, state):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = jnp.zeros_like(state)
+
+    x = x_ref[0].astype(jnp.float32)                      # (C, P)
+    Bm = b_ref[0].astype(jnp.float32)                     # (C, N)
+    Cm = c_ref[0].astype(jnp.float32)                     # (C, N)
+    da = da_ref[0].astype(jnp.float32)                    # (C, 1) log decay
+    h = state[...]                                        # (P, N)
+
+    cum = jnp.cumsum(da[:, 0])                            # (C,)
+    # cross-chunk
+    y = jnp.exp(cum)[:, None] * (Cm @ h.T)                # (C, P)
+    # intra-chunk: G[t,s] = C_t.B_s ; L[t,s] = exp(cum_t - cum_s) (s <= t)
+    C = x.shape[0]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    mask = s_idx <= t_idx
+    g = Cm @ Bm.T
+    ldec = jnp.where(mask, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    y = y + (g * ldec) @ x
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update
+    kdec = jnp.exp(cum[-1] - cum)[:, None] * Bm           # (C, N)
+    state[...] = jnp.exp(cum[-1]) * h + x.T @ kdec
+
+
+def ssd_scan(x, Bm, Cm, da, chunk: int = 64, interpret: bool = False):
+    """x: (BH, S, P); Bm/Cm: (BH, S, N); da: (BH, S, 1) log decay <= 0.
+    Returns y (BH, S, P).  S must divide by ``chunk`` (ops.py pads)."""
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    grid = (BH, S // chunk)
+    xspec = pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0))
+    nspec = pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0))
+    dspec = pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0))
+    return pl.pallas_call(
+        _ssd_kernel,
+        grid=grid,
+        in_specs=[xspec, nspec, nspec, dspec],
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, Bm, Cm, da)

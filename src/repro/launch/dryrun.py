@@ -1,0 +1,218 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each applicable cell (configs/shapes.py::applicable):
+
+  * train_4k     -> train_step   (single-pod: sync step; multi-pod: the
+                                  FedAT pods-as-tiers step with compressed
+                                  cross-tier collectives)
+  * prefill_32k  -> serve_prefill
+  * decode_32k / long_500k -> serve_step (one token against a seq_len cache)
+
+and records compiled.memory_analysis(), cost_analysis() and the per-device
+collective byte volume parsed from the partitioned HLO into
+experiments/dryrun_<mesh>.json — the inputs to benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both [--out experiments]
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, applicable
+from repro.configs.base import TrainConfig
+from repro.configs import registry
+from repro.core import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.runtime import sharding as shd
+from repro.runtime.hlo import collective_bytes, count_collectives
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               fedat_bits: int = 8, overrides: Dict[str, Any] = None,
+               rules_override: Dict[str, Any] = None):
+    """Returns (lowered, meta) for one cell."""
+    cfg = registry.get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    if not applicable(cfg, shape):
+        return None, {"skipped": True}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tp = mesh.shape["model"]
+    key = jax.random.PRNGKey(0)
+
+    # tiny-batch cells (long_500k: B=1) cannot shard batch over the data
+    # axis: replicate batch dims, keep model-axis sharding.
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    rules = dict(rules_override or {})
+    if shape.global_batch < dp:
+        rules.update({"batch": None, "cache_batch": None})
+    rules = rules or None
+
+    with mesh, shd.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            tcfg = TrainConfig(fedat_enabled=multi_pod,
+                               fedat_compress_bits=fedat_bits)
+            if multi_pod:
+                fns = steps_mod.make_fedat_step(cfg, tcfg, mesh,
+                                                param_dtype=jnp.bfloat16)
+                n_pods = mesh.shape["pod"]
+                batch = steps_mod.split_batch_for_pods(
+                    lm.input_specs(cfg, shape), n_pods)
+                batch = jax.tree.map(
+                    lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), batch)
+            else:
+                fns = steps_mod.make_single_pod_step(
+                    cfg, tcfg, mesh, param_dtype=jnp.bfloat16)
+                batch = lm.input_specs(cfg, shape)
+            state = jax.eval_shape(fns.init_state, key)
+            lowered = jax.jit(
+                fns.train_step,
+                in_shardings=(fns.state_shardings, fns.batch_shardings),
+                out_shardings=(fns.state_shardings, None),
+                donate_argnums=(0,),  # state buffers reused in place
+            ).lower(state, batch)
+        else:
+            params = lm.abstract_params(cfg, tp, jnp.bfloat16)
+            p_sh = jax.tree.map(
+                lambda a: shd.logical_sharding(a, mesh),
+                lm.param_axes(cfg, tp),
+                is_leaf=lambda l: isinstance(l, tuple))
+            cache = lm.abstract_cache(cfg, shape.global_batch, shape.seq_len,
+                                      tp)
+            c_sh = jax.tree.map(
+                lambda a: shd.logical_sharding(a, mesh),
+                lm.cache_axes_tree(cfg, tp),
+                is_leaf=lambda l: isinstance(l, tuple) and all(
+                    x is None or isinstance(x, str) for x in l))
+            if shape.kind == "prefill":
+                batch = lm.input_specs(cfg, shape)
+                b_sh = {k: shd.logical_sharding(a, mesh)
+                        for k, a in lm.input_axes(cfg, shape).items()}
+                fn = lambda p, b, c: lm.serve_prefill(
+                    cfg, lm.anchor_params(cfg, p, tp), b, tp, c)
+                lowered = jax.jit(
+                    fn, in_shardings=(p_sh, b_sh, c_sh),
+                    out_shardings=(None, c_sh),  # match in: enables aliasing
+                    donate_argnums=(2,),  # cache updated in place
+                ).lower(params, batch, cache)
+            else:
+                toks = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+                pos = jax.ShapeDtypeStruct((), jnp.int32)
+                t_sh = shd.logical_sharding(("batch",), mesh)
+                fn = lambda p, t, po, c: lm.serve_step(
+                    cfg, lm.anchor_params(cfg, p, tp), t, po, tp, c)
+                lowered = jax.jit(
+                    fn, in_shardings=(p_sh, t_sh, None, c_sh),
+                    out_shardings=(None, c_sh),  # match in: enables aliasing
+                    donate_argnums=(3,),  # cache updated in place
+                ).lower(params, toks, pos, cache)
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "multi" if multi_pod else "single",
+            "n_devices": mesh.size, "tp": tp}
+    return lowered, meta
+
+
+def compile_cell(arch: str, shape_name: str, multi_pod: bool,
+                 fedat_bits: int = 8, overrides=None,
+                 rules_override=None) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, meta = lower_cell(arch, shape_name, multi_pod, fedat_bits,
+                               overrides, rules_override)
+    if lowered is None:
+        return meta
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    ma = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    meta.update({
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "code_bytes": int(ma.generated_code_size_in_bytes),
+        },
+        "peak_bytes_per_device": int(ma.argument_size_in_bytes +
+                                     ma.temp_size_in_bytes),
+        "cost": {"flops": float(cost.get("flops", 0.0)),
+                 "bytes_accessed": float(cost.get("bytes accessed", 0.0))},
+        "collectives": count_collectives(txt),
+        "collective_bytes_per_device": collective_bytes(txt),
+    })
+    print(f"[dryrun] {meta['arch']:22s} {meta['shape']:12s} "
+          f"{meta['mesh']:6s} compile={meta['compile_s']:7.1f}s "
+          f"peak/dev={meta['peak_bytes_per_device']/2**30:6.2f}GiB "
+          f"coll/dev={meta['collective_bytes_per_device']/2**20:8.1f}MiB",
+          flush=True)
+    return meta
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments")
+    ap.add_argument("--fedat-bits", type=int, default=8)
+    ap.add_argument("--no-serve-fsdp", action="store_true",
+                    help="replicate weights over the data axis for serve "
+                         "cells (removes per-step weight gathers; only for "
+                         "models whose weights fit — see §Perf cell B)")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    results = []
+    failures = 0
+    for multi in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rules = None
+                if args.no_serve_fsdp and SHAPES[shape].kind != "train":
+                    rules = {"fsdp": None}
+                try:
+                    results.append(compile_cell(arch, shape, multi,
+                                                args.fedat_bits,
+                                                rules_override=rules))
+                except Exception:
+                    failures += 1
+                    print(f"[dryrun] FAILED {arch} {shape} "
+                          f"{'multi' if multi else 'single'}", flush=True)
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "multi" if multi else "single",
+                                    "failed": True})
+        tag = "multi" if multi else "single"
+        with open(os.path.join(args.out, f"dryrun_{tag}.json"), "w") as f:
+            json.dump([r for r in results
+                       if r.get("mesh") == tag or r.get("skipped")], f,
+                      indent=1)
+    ok = sum(1 for r in results if "peak_bytes_per_device" in r)
+    skip = sum(1 for r in results if r.get("skipped"))
+    print(f"[dryrun] done: {ok} compiled, {skip} skipped (documented), "
+          f"{failures} FAILED", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

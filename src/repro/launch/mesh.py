@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods x 256 chips as (pod=2, data=16, model=16) — the ``pod``
+axis is the FedAT *tier* axis (DESIGN.md §Scale-mapping).
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module does not touch jax device state; the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_pods: int = 1) -> jax.sharding.Mesh:
+    """Degenerate mesh over however many devices this host actually has —
+    used by CPU drivers/tests so the same code path exercises sharding."""
+    n = len(jax.devices())
+    if n_pods > 1 and n % n_pods == 0:
+        return jax.make_mesh(
+            (n_pods, n // n_pods, 1), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (n, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e hardware model for the roofline analysis (per chip)
+V5E_PEAK_FLOPS = 197e12        # bf16 FLOP/s
+V5E_HBM_BW = 819e9             # bytes/s
+V5E_ICI_BW = 50e9              # bytes/s per link

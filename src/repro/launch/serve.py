@@ -1,0 +1,139 @@
+"""Serving driver: batched prefill + decode with continuous batching.
+
+A minimal production-shaped server loop: requests (prompt token arrays)
+queue up, get packed into fixed-size batches, prefilled once, then decoded
+step-by-step; finished sequences free their slot for queued requests
+(continuous batching).  Works with every decoder arch in the registry —
+KV-cache layouts (full / sliding-window ring / SSM state / hybrid) are
+handled by lm.init_cache.
+
+Example (CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
+      --requests 8 --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import lm
+from repro.runtime import sharding as shd
+
+log = logging.getLogger("repro.serve")
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class Server:
+    """Fixed-slot continuous-batching decoder."""
+
+    def __init__(self, cfg, batch_slots: int, max_len: int, tp: int = 1,
+                 seed: int = 0, dtype=jnp.float32):
+        self.cfg = cfg
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.max_len = max_len
+        self.tp = tp
+        self.params = lm.init_params(cfg, jax.random.PRNGKey(seed), tp, dtype)
+        self.cache = lm.init_cache(cfg, batch_slots, max_len, tp, dtype)
+        self.pos = 0
+        self._prefill = jax.jit(
+            lambda p, b, c: lm.serve_prefill(cfg, p, b, tp, c))
+        self._step = jax.jit(
+            lambda p, t, po, c: lm.serve_step(cfg, p, t, po, tp, c))
+
+    # -- batched service loop ------------------------------------------------
+    def run(self, requests: List[Request]) -> List[Request]:
+        queue = list(requests)
+        done: List[Request] = []
+        B = len(self.slots)
+
+        # pack first wave: right-align prompts to a common prefill length
+        wave = [queue.pop(0) for _ in range(min(B, len(queue)))]
+        plen = max(len(r.prompt) for r in wave)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.prompt):] = r.prompt
+            self.slots[i] = r
+        logits, self.cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)}, self.cache)
+        self.pos = plen
+        next_tok = np.asarray(
+            jnp.argmax(logits[:, :self.cfg.vocab_size], -1), np.int32)
+
+        steps = 0
+        while any(s is not None for s in self.slots) and self.pos < \
+                self.max_len:
+            logits, self.cache = self._step(
+                self.params, jnp.asarray(next_tok),
+                jnp.asarray(self.pos, jnp.int32), self.cache)
+            self.pos += 1
+            steps += 1
+            next_tok = np.array(
+                jnp.argmax(logits[:, :self.cfg.vocab_size], -1), np.int32,
+                copy=True)
+            for i, r in enumerate(self.slots):
+                if r is None:
+                    continue
+                r.out.append(int(next_tok[i]))
+                if r.done:
+                    done.append(r)
+                    # continuous batching: hand the slot to a queued request
+                    # (its prompt decodes token-by-token into the live batch)
+                    self.slots[i] = queue.pop(0) if queue else None
+                    if self.slots[i] is not None:
+                        next_tok[i] = self.slots[i].prompt[0]
+        done.extend(s for s in self.slots if s is not None)
+        return done, steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="rwkv6-3b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    logging.basicConfig(level=logging.INFO)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not cfg.is_decoder:
+        raise SystemExit(f"{args.arch} is encoder-only: nothing to decode")
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    rng.integers(4, args.prompt_len + 1)),
+                    args.max_new) for i in range(args.requests)]
+    server = Server(cfg, args.slots,
+                    max_len=args.prompt_len + args.max_new * 4)
+    t0 = time.time()
+    done, steps = server.run(reqs)
+    dt = time.time() - t0
+    tput = sum(len(r.out) for r in done) / max(dt, 1e-9)
+    log.info("served %d requests, %d decode steps, %.1f tok/s",
+             len(done), steps, tput)
+    return done
+
+
+if __name__ == "__main__":
+    main()

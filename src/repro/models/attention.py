@@ -1,0 +1,232 @@
+"""GQA/MQA attention: chunked full/windowed prefill + cached decode.
+
+Design notes (see DESIGN.md §TP-scheme):
+  * Query heads are padded up to a multiple of the TP degree; padded heads
+    have zero projections in and out, so they contribute nothing to the
+    output (the wasted FLOPs are *visible* in the roofline ratio on purpose).
+  * KV heads are sharded over the model axis iff divisible by it; otherwise
+    KV projections are replicated and the decode KV *cache* is sharded along
+    the sequence dim instead ("kv_seq"), which GSPMD supports by inserting
+    max/sum all-reduces inside the softmax.
+  * Prefill uses a query-chunked lax.scan so the (S x T) logits never
+    materialize; sliding-window configs slice a (W + C)-slab of K/V per
+    chunk, making SWA prefill cost O(S*W) instead of O(S^2).
+  * Decode updates the cache with a `where(iota == pos)` one-hot write: no
+    dynamic-slice on a sharded dim, hence no surprise all-gathers.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PSpec, apply_rope
+from repro.runtime import sharding as shd
+
+NEG_INF = -1e9
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig, tp: int, prefix_layers: Tuple[int, ...] = ()
+               ) -> Dict[str, PSpec]:
+    """Param specs for one attention block (optionally stacked over layers)."""
+    d, hd, kv = cfg.d_model, cfg.head_dim, cfg.n_kv_heads
+    hp = cfg.padded_heads(tp)
+    kv_ax = "tp" if cfg.kv_sharded(tp) else None
+    L = prefix_layers
+    lax_ = tuple("layers" for _ in L)
+    sp = {
+        "wq": PSpec(L + (d, hp * hd), lax_ + ("fsdp", "tp")),
+        "wk": PSpec(L + (d, kv * hd), lax_ + ("fsdp", kv_ax)),
+        "wv": PSpec(L + (d, kv * hd), lax_ + ("fsdp", kv_ax)),
+        "wo": PSpec(L + (hp * hd, d), lax_ + ("tp", "fsdp")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = PSpec(L + (hp * hd,), lax_ + ("tp",), init="zeros")
+        sp["bk"] = PSpec(L + (kv * hd,), lax_ + (kv_ax,), init="zeros")
+        sp["bv"] = PSpec(L + (kv * hd,), lax_ + (kv_ax,), init="zeros")
+    return sp
+
+
+def cache_axes(cfg: ModelConfig, tp: int) -> Tuple[Optional[str], ...]:
+    """Logical axes of a (B, T, kv, hd) KV cache slab."""
+    if cfg.kv_sharded(tp):
+        return ("cache_batch", None, "tp", None)
+    return ("cache_batch", "kv_seq", None, None)
+
+
+class KVCache(NamedTuple):
+    """Per-layer KV cache. k/v: (B, T, kv, hd); pos: scalar int32 next index.
+
+    For sliding-window configs T == window and writes wrap (ring buffer);
+    ``positions`` tracks the absolute position stored in each slot (-1 empty).
+    """
+    k: jax.Array
+    v: jax.Array
+    positions: jax.Array  # (B, T) int32
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+               dtype=jnp.bfloat16, stacked: int = 0) -> KVCache:
+    T = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    lead = (stacked,) if stacked else ()
+    k = jnp.zeros(lead + (batch, T, kv, hd), dtype)
+    pos = jnp.full(lead + (batch, T), -1, jnp.int32)
+    return KVCache(k=k, v=k, positions=pos)
+
+
+# ---------------------------------------------------------------------------
+# core math
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
+                 tp: int):
+    """x: (B, S, d) -> q: (B,S,kv,G,hd), k/v: (B,S,kv,hd), RoPE applied."""
+    hd, kv = cfg.head_dim, cfg.n_kv_heads
+    hp = cfg.padded_heads(tp)
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    kv_ax = "tp" if cfg.kv_sharded(tp) else None
+    q = shd.shard(q, "batch", None, "tp")
+    k = shd.shard(k, "batch", None, kv_ax)
+    v = shd.shard(v, "batch", None, kv_ax)
+    q = q.reshape(*q.shape[:2], hp, hd)
+    k = k.reshape(*k.shape[:2], kv, hd)
+    v = v.reshape(*v.shape[:2], kv, hd)
+    if cfg.causal or cfg.family in ("audio",):  # RoPE everywhere (see DESIGN.md)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = q.reshape(*q.shape[:2], kv, hp // kv, hd)
+    return q, k, v
+
+
+def _attend(q, k, v, mask):
+    """q: (B,C,kv,G,hd), k/v: (B,T,kv,hd), mask: (B?,C,T) bool -> (B,C,kv,G,hd)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    logits = jnp.einsum("bckgh,btkh->bkgct", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bkgct,btkh->bckgh", probs, v)
+
+
+def full_attention(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
+                   tp: int, prefix_len: int = 0) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: (B, S, d)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions, tp)
+    C = min(cfg.attn_chunk, S)
+    W = cfg.swa_window
+
+    def block_mask(pos_q, pos_kv):
+        m = jnp.ones((pos_q.shape[0], pos_kv.shape[0]), bool)
+        if cfg.causal:
+            m = pos_q[:, None] >= pos_kv[None, :]
+            if prefix_len:  # prefix-LM: bidirectional over the prefix
+                m = m | (pos_kv[None, :] < prefix_len)
+        if W is not None:
+            m = m & (pos_q[:, None] - pos_kv[None, :] < W)
+        return m
+
+    if S <= C:
+        out = _attend(q, k, v, block_mask(positions, positions)[None])
+    else:
+        n = -(-S // C)  # ceil: pad the query side to a chunk multiple
+        Sp = n * C
+        qp = jnp.pad(q, ((0, 0), (0, Sp - S)) + ((0, 0),) * (q.ndim - 2)) \
+            if Sp != S else q
+        qc = qp.reshape(B, n, C, *q.shape[2:]).transpose(1, 0, 2, 3, 4, 5)
+
+        if W is not None and W + C < S:
+            slab = W + C  # windowed: only a slab of K/V is live per chunk
+
+            def step(_, iq):
+                i, qi = iq
+                start = jnp.maximum(i * C + C - slab, 0)
+                ks = jax.lax.dynamic_slice_in_dim(k, start, slab, axis=1)
+                vs = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=1)
+                pq = i * C + jnp.arange(C)
+                pkv = start + jnp.arange(slab)
+                return None, _attend(qi, ks, vs, block_mask(pq, pkv)[None])
+        else:
+            def step(_, iq):
+                i, qi = iq
+                pq = i * C + jnp.arange(C)
+                return None, _attend(qi, k, v, block_mask(pq, positions)[None])
+
+        _, oc = jax.lax.scan(step, None, (jnp.arange(n), qc),
+                             unroll=True if cfg.unroll_scans else 1)
+        out = oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, *oc.shape[3:])
+        out = out[:, :S]
+
+    out = out.reshape(B, S, -1)
+    out = shd.shard(out, "batch", None, "tp")
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def prefill_attention(cfg: ModelConfig, p, x, positions, tp: int,
+                      cache: KVCache, prefix_len: int = 0
+                      ) -> Tuple[jax.Array, KVCache]:
+    """Full attention + populate the cache with this segment's K/V.
+
+    The slots written are statically known (positions 0..S-1), so the ring
+    placement is a static pad + roll — no one-hot scatter FLOPs.
+    """
+    B, S, _ = x.shape
+    out = full_attention(cfg, p, x, positions, tp, prefix_len)
+    # recompute k/v for the cache write (cheap vs attention itself)
+    _, k, v = _project_qkv(cfg, p, x, positions, tp)
+    T = cache.k.shape[1]
+    keep = min(S, T)
+    k, v = k[:, -keep:], v[:, -keep:]
+    pos_tail = jnp.arange(S - keep, S, dtype=jnp.int32)
+    if keep < T:  # right-pad empty slots
+        padw = ((0, 0), (0, T - keep), (0, 0), (0, 0))
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
+        pos_tail = jnp.pad(pos_tail, (0, T - keep), constant_values=-1)
+    shift = (S - keep) % T  # first kept position lands at this slot
+    if shift:
+        k = jnp.roll(k, shift, axis=1)
+        v = jnp.roll(v, shift, axis=1)
+        pos_tail = jnp.roll(pos_tail, shift)
+    ck = shd.shard(k.astype(cache.k.dtype), *cache_axes(cfg, tp))
+    cv = shd.shard(v.astype(cache.v.dtype), *cache_axes(cfg, tp))
+    cpos = jnp.broadcast_to(pos_tail[None, :], (B, T))
+    return out, KVCache(k=ck, v=cv, positions=cpos)
+
+
+def decode_attention(cfg: ModelConfig, p, x: jax.Array, pos: jax.Array,
+                     tp: int, cache: KVCache) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, d), pos: scalar int32 (current position)."""
+    B = x.shape[0]
+    T = cache.k.shape[1]
+    positions = jnp.full((1,), pos, jnp.int32)
+    q, k, v = _project_qkv(cfg, p, x, positions, tp)  # q:(B,1,kv,G,hd)
+
+    slot = (pos % T).astype(jnp.int32)
+    iota = jnp.arange(T, dtype=jnp.int32)
+    hit = (iota == slot)[None, :, None, None]
+    ck = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
+    cv = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
+    cpos = jnp.where(iota[None, :] == slot, pos, cache.positions)
+    ck = shd.shard(ck, *cache_axes(cfg, tp))
+    cv = shd.shard(cv, *cache_axes(cfg, tp))
+
+    valid = (cpos >= 0) & (cpos <= pos)
+    if cfg.swa_window is not None:
+        valid = valid & (cpos > pos - cfg.swa_window)
+    out = _attend(q, ck.astype(x.dtype), cv.astype(x.dtype), valid[:, None, :])
+    out = out.reshape(B, 1, -1)
+    out = shd.shard(out, "batch", None, "tp")
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return y, KVCache(k=ck, v=cv, positions=cpos)

@@ -1,0 +1,94 @@
+"""The paper's client models (FedAT §6.1).
+
+  * CIFAR-10 / Fashion-MNIST CNN: conv(32) -> conv(64) -> conv(64) ->
+    dense(64) -> dense(n_classes), each conv followed by 2x2 max-pool.
+  * Sentiment140: logistic regression (convex objective).
+
+Pure-JAX functional models: params are dicts, ``apply`` maps
+(params, x) -> logits.  Used by the federated simulation (clients train
+these locally) and by the paper-table benchmarks.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_init(key: jax.Array, in_shape: Tuple[int, int, int] = (32, 32, 3),
+             n_classes: int = 10) -> Dict[str, jax.Array]:
+    h, w, c = in_shape
+    ks = jax.random.split(key, 5)
+
+    def he(k, shape, fan_in):
+        return jax.random.normal(k, shape) * math.sqrt(2.0 / fan_in)
+
+    p = {
+        "c1_w": he(ks[0], (3, 3, c, 32), 9 * c), "c1_b": jnp.zeros((32,)),
+        "c2_w": he(ks[1], (3, 3, 32, 64), 9 * 32), "c2_b": jnp.zeros((64,)),
+        "c3_w": he(ks[2], (3, 3, 64, 64), 9 * 64), "c3_b": jnp.zeros((64,)),
+    }
+    hh, ww = h // 8, w // 8  # three 2x2 pools
+    flat = hh * ww * 64
+    p["d1_w"] = he(ks[3], (flat, 64), flat)
+    p["d1_b"] = jnp.zeros((64,))
+    p["d2_w"] = he(ks[4], (64, n_classes), 64)
+    p["d2_b"] = jnp.zeros((n_classes,))
+    return p
+
+
+def cnn_apply(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """x: (B, H, W, C) float -> logits (B, n_classes)."""
+    x = _maxpool(jax.nn.relu(_conv(x, p["c1_w"], p["c1_b"])))
+    x = _maxpool(jax.nn.relu(_conv(x, p["c2_w"], p["c2_b"])))
+    x = _maxpool(jax.nn.relu(_conv(x, p["c3_w"], p["c3_b"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ p["d1_w"] + p["d1_b"])
+    return x @ p["d2_w"] + p["d2_b"]
+
+
+def logreg_init(key: jax.Array, n_features: int, n_classes: int = 2
+                ) -> Dict[str, jax.Array]:
+    return {
+        "w": jax.random.normal(key, (n_features, n_classes)) * 0.01,
+        "b": jnp.zeros((n_classes,)),
+    }
+
+
+def logreg_apply(p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """x: (B, F) -> logits (B, n_classes). Convex objective."""
+    return x @ p["w"] + p["b"]
+
+
+def make_model(kind: str, key: jax.Array, **kw):
+    """Returns (params, apply_fn)."""
+    if kind == "cnn":
+        return cnn_init(key, **kw), cnn_apply
+    if kind == "logreg":
+        return logreg_init(key, **kw), logreg_apply
+    raise ValueError(kind)
+
+
+def ce_loss(apply_fn, params, batch) -> jax.Array:
+    logits = apply_fn(params, batch["x"])
+    labels = jax.nn.one_hot(batch["y"], logits.shape[-1])
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(labels * logp, axis=-1))
+
+
+def accuracy(apply_fn, params, x, y) -> jax.Array:
+    return jnp.mean(jnp.argmax(apply_fn(params, x), axis=-1) == y)

@@ -1,0 +1,128 @@
+"""Shared model building blocks: param specs, init, norms, RoPE, losses.
+
+Parameters are plain nested dicts of ``jnp`` arrays.  Every model module
+declares a same-structure tree of :class:`PSpec` (shape + logical axes +
+init style); generic helpers materialize arrays / shardings from it, so
+model code never hand-writes PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class PSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small
+    scale: Optional[float] = None  # override fan-in scaling
+
+
+def is_pspec(x) -> bool:
+    return isinstance(x, PSpec)
+
+
+def init_from_specs(specs: Dict[str, Any], key: jax.Array, dtype=jnp.float32):
+    """Materialize a param tree from a spec tree (deterministic per-path keys)."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_pspec)
+    keys = jax.random.split(key, len(leaves))
+
+    def mk(spec: PSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+        if len(spec.shape) >= 2:
+            fan_in = spec.shape[-2]
+        std = spec.scale if spec.scale is not None else 1.0 / math.sqrt(fan_in)
+        if spec.init == "small":
+            std = 0.02
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [mk(s, k) for s, k in zip(leaves, keys)])
+
+
+def axes_from_specs(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_pspec)
+
+
+def shapes_from_specs(specs, dtype=jnp.float32):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=is_pspec)
+
+
+def shardings_from_specs(specs, mesh=None):
+    return jax.tree.map(lambda s: shd.logical_sharding(s.axes, mesh), specs,
+                        is_leaf=is_pspec)
+
+
+def param_bytes(specs, bytes_per_el=2) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_pspec)
+    return sum(math.prod(s.shape) for s in leaves) * bytes_per_el
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * gamma.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    dt = x.dtype
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_in: jax.Array, w_out: jax.Array,
+           act: str = "silu") -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    h = shd.shard(g * h, "batch", None, "tp")
+    return jnp.einsum("...f,fd->...d", h, w_out)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None,
+                          vocab_size: Optional[int] = None) -> jax.Array:
+    """Mean CE over masked positions; safe with TP-padded vocab.
+
+    logits: (..., V_padded) possibly vocab-sharded; labels int (...,).
+    Padded vocab entries are excluded via a large-negative bias.
+    """
+    logits = logits.astype(jnp.float32)
+    if vocab_size is not None and vocab_size < logits.shape[-1]:
+        pad = logits.shape[-1] - vocab_size
+        neg = jnp.full((pad,), -1e9, jnp.float32)
+        logits = logits + jnp.concatenate([jnp.zeros((vocab_size,)), neg])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

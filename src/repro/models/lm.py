@@ -1,0 +1,224 @@
+"""Unified LM facade: one API over all assigned architectures.
+
+  * ``param_specs / init_params / param_axes``
+  * ``loss_fn(cfg, params, batch, tp)``          (train shapes)
+  * ``serve_prefill(cfg, params, batch, tp, cache)``
+  * ``serve_step(cfg, params, tokens, pos, tp, cache)``
+  * ``init_cache / abstract_cache / cache_axes_tree``
+  * ``input_specs(cfg, shape)``                  (ShapeDtypeStruct stand-ins)
+
+Families: dense/vlm/audio/moe -> transformer.py; ssm -> rwkv6.py;
+hybrid -> zamba2.py.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeConfig
+from repro.models import attention as attn
+from repro.models import common, rwkv6, transformer, zamba2
+from repro.models import mamba2
+from repro.models.common import PSpec, rms_norm
+from repro.runtime import sharding as shd
+
+TRANSFORMER_FAMILIES = ("dense", "moe", "vlm", "audio")
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, tp: int) -> Dict[str, Any]:
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return transformer.param_specs(cfg, tp)
+    if cfg.family == "hybrid":
+        return zamba2.param_specs(cfg, tp)
+    if cfg.family == "ssm":
+        vp = cfg.padded_vocab(tp)
+        d = cfg.d_model
+        return {
+            "embed": PSpec((vp, d), ("tp", "fsdp"), init="small"),
+            "layers": rwkv6.layer_specs(cfg, tp, cfg.n_layers),
+            "final_norm": PSpec((d,), (None,), init="ones"),
+            "lm_head": PSpec((d, vp), ("fsdp", "tp"), init="small"),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, tp: int, dtype=jnp.float32):
+    return common.init_from_specs(param_specs(cfg, tp), key, dtype)
+
+
+def param_axes(cfg: ModelConfig, tp: int):
+    return common.axes_from_specs(param_specs(cfg, tp))
+
+
+def anchor_params(cfg: ModelConfig, params, tp: int):
+    """Pin every param leaf to its logical sharding *inside* the jitted fn.
+
+    Without this anchor GSPMD may hoist the FSDP un-shard of the stacked
+    layer weights out of the scan-over-layers loop — materializing all L
+    layers' gathered weights at once (13.7 GiB for qwen1.5-110b) instead of
+    one layer at a time.
+    """
+    axes = param_axes(cfg, tp)
+    return jax.tree.map(
+        lambda x, a: shd.shard(x, *a), params, axes,
+        is_leaf=lambda l: isinstance(l, (jax.Array, jax.ShapeDtypeStruct)))
+
+
+def abstract_params(cfg: ModelConfig, tp: int, dtype=jnp.bfloat16):
+    return common.shapes_from_specs(param_specs(cfg, tp), dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv model-level glue (transformer/zamba have their own modules)
+# ---------------------------------------------------------------------------
+
+def _rwkv_forward(cfg, p, tokens, state, tp, single_token):
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = shd.shard(x, "batch", None, None)
+
+    def body(carry, xs):
+        lp, st = xs
+        y, st = rwkv6.block(cfg, lp, carry, st, tp, single_token)
+        return y, st
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, new_state = jax.lax.scan(fn, x, (p["layers"], state))
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    return x, new_state
+
+
+def _rwkv_loss(cfg, p, batch, tp):
+    tokens = batch["tokens"]
+    state = rwkv6.init_state(cfg, tokens.shape[0], tp, stacked=cfg.n_layers)
+    x, _ = _rwkv_forward(cfg, p, tokens, state, tp, False)
+    return zamba2._chunked_ce(cfg, x, p["lm_head"], tokens, tp)
+
+
+def _rwkv_prefill(cfg, p, batch, tp, state):
+    tokens = batch["tokens"]
+    x, new_state = _rwkv_forward(cfg, p, tokens, state, tp, False)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], p["lm_head"])
+    return shd.shard(logits, "batch", "tp"), new_state
+
+
+def _rwkv_step(cfg, p, tokens, pos, tp, state):
+    del pos  # stateful: position-free
+    x, new_state = _rwkv_forward(cfg, p, tokens[:, None], state, tp, True)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], p["lm_head"])
+    return shd.shard(logits, "batch", "tp"), new_state
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+def loss_fn(cfg: ModelConfig, p, batch, tp: int):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return transformer.loss_fn(cfg, p, batch, tp)
+    if cfg.family == "hybrid":
+        return zamba2.loss_fn(cfg, p, batch, tp)
+    return _rwkv_loss(cfg, p, batch, tp)
+
+
+def serve_prefill(cfg: ModelConfig, p, batch, tp: int, cache):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return transformer.serve_prefill(cfg, p, batch, tp, cache)
+    if cfg.family == "hybrid":
+        return zamba2.serve_prefill(cfg, p, batch, tp, cache)
+    return _rwkv_prefill(cfg, p, batch, tp, cache)
+
+
+def serve_step(cfg: ModelConfig, p, tokens, pos, tp: int, cache):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return transformer.serve_step(cfg, p, tokens, pos, tp, cache)
+    if cfg.family == "hybrid":
+        return zamba2.serve_step(cfg, p, tokens, pos, tp, cache)
+    return _rwkv_step(cfg, p, tokens, pos, tp, cache)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+               dtype=jnp.bfloat16):
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return transformer.init_cache(cfg, batch, max_len, tp, dtype)
+    if cfg.family == "hybrid":
+        return zamba2.init_cache(cfg, batch, max_len, tp, dtype)
+    return rwkv6.init_state(cfg, batch, tp, stacked=cfg.n_layers)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, batch, max_len, tp, dtype))
+
+
+def cache_axes_tree(cfg: ModelConfig, tp: int):
+    """Logical-axes tree matching the cache structure."""
+    kv_axes = (None,) + attn.cache_axes(cfg, tp)
+    kv_tree = attn.KVCache(k=kv_axes, v=kv_axes,
+                           positions=(None, "cache_batch", kv_axes[2]))
+    if cfg.family in TRANSFORMER_FAMILIES:
+        return kv_tree
+    if cfg.family == "hybrid":
+        return zamba2.ZambaCache(
+            mamba=mamba2.MambaState(
+                conv=(None, "cache_batch", None, None),
+                h=(None, "cache_batch", "tp", None, None)),
+            kv=kv_tree,
+        )
+    return rwkv6.RWKVState(
+        tshift=(None, "cache_batch", None),
+        cshift=(None, "cache_batch", None),
+        wkv=(None, "cache_batch", "tp", None, None),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins for the dry-run / launchers)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            np_ = min(cfg.n_frontend_tokens, S // 2)
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, np_, cfg.d_model),
+                                                     jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S - np_), i32),
+            }
+        if cfg.family == "audio":
+            out = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                  jnp.bfloat16)}
+            if shape.kind == "train":
+                out["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+                out["mask"] = jax.ShapeDtypeStruct((B, S), jnp.bool_)
+            return out
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of S
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def input_axes(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Tuple]:
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            return {"patch_embeds": ("batch", None, None),
+                    "tokens": ("batch", None)}
+        if cfg.family == "audio":
+            out = {"frames": ("batch", None, None)}
+            if shape.kind == "train":
+                out["labels"] = ("batch", None)
+                out["mask"] = ("batch", None)
+            return out
+        return {"tokens": ("batch", None)}
+    return {"tokens": ("batch",), "pos": ()}

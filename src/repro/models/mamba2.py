@@ -1,0 +1,175 @@
+"""Mamba2 (SSD) block [arXiv:2405.21060], the Zamba2 backbone unit.
+
+State-space recurrence per head (A scalar per head, n_groups=1):
+
+    h_t = exp(dt_t * A) * h_{t-1} + dt_t * x_t (x) B_t      h: (P, N)
+    y_t = C_t . h_t + D * x_t
+
+Training uses the chunked SSD form: intra-chunk (C_t.B_s) kernel with a
+masked log-space decay matrix (always <= 0 before exp: stable), plus
+cross-chunk state passing.  Decode carries (conv window, h) only.
+
+TP: d_inner = 5120 and nh = 80 both divide 16, and 320-per-device slices
+align to whole SSD heads, so no padding is needed for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PSpec, rms_norm
+from repro.runtime import sharding as shd
+
+
+def layer_specs(cfg: ModelConfig, tp: int, L: int) -> Dict[str, Any]:
+    d, s = cfg.d_model, cfg.ssm
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ds = s.d_state
+    lx = ("layers",)
+    return {
+        "w_z": PSpec((L, d, di), lx + ("fsdp", "tp")),
+        "w_x": PSpec((L, d, di), lx + ("fsdp", "tp")),
+        "w_B": PSpec((L, d, ds), lx + ("fsdp", None)),
+        "w_C": PSpec((L, d, ds), lx + ("fsdp", None)),
+        "w_dt": PSpec((L, d, nh), lx + ("fsdp", "tp")),
+        "conv_x": PSpec((L, s.d_conv, di), lx + (None, "tp"), init="small"),
+        "conv_B": PSpec((L, s.d_conv, ds), lx + (None, None), init="small"),
+        "conv_C": PSpec((L, s.d_conv, ds), lx + (None, None), init="small"),
+        "dt_bias": PSpec((L, nh), lx + ("tp",), init="zeros"),
+        "A_log": PSpec((L, nh), lx + ("tp",), init="zeros"),
+        "D": PSpec((L, nh), lx + ("tp",), init="ones"),
+        "gn": PSpec((L, di), lx + ("tp",), init="ones"),
+        "ln": PSpec((L, d), lx + (None,), init="ones"),
+        "w_out": PSpec((L, di, d), lx + ("tp", "fsdp")),
+    }
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, di + 2*ds) last inputs to the causal conv
+    h: jax.Array     # (B, nh, P, N) f32 SSD state
+
+
+def init_state(cfg: ModelConfig, batch: int, stacked: int = 0) -> MambaState:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    lead = (stacked,) if stacked else ()
+    return MambaState(
+        conv=jnp.zeros(lead + (batch, s.d_conv - 1, di + 2 * s.d_state),
+                       jnp.float32),
+        h=jnp.zeros(lead + (batch, nh, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, prev: jax.Array) -> jax.Array:
+    """Depthwise causal conv. seq: (B,S,ch), w: (K,ch), prev: (B,K-1,ch)."""
+    K = w.shape[0]
+    full = jnp.concatenate([prev.astype(seq.dtype), seq], axis=1)
+    out = jnp.zeros_like(seq)
+    for i in range(K):
+        out = out + full[:, i:i + seq.shape[1]] * w[i]
+    return out
+
+
+def _ssd_chunked(xh, Bm, Cm, da, h0, chunk, unroll: bool = False):
+    """Chunked SSD.  xh: (B,S,H,P); Bm/Cm: (B,S,N); da: (B,S,H) log decay<=0;
+    h0: (B,H,P,N) f32.  Returns (y (B,S,H,P), h (B,H,P,N))."""
+    B, S, H, P = xh.shape
+    C = min(chunk, S)
+    nc = -(-S // C)
+    Sp = nc * C
+    if Sp != S:  # zero-pad: x=0 adds nothing to state, da=0 keeps decay 1
+        xh = jnp.pad(xh, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, Sp - S), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, Sp - S), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, Sp - S), (0, 0)))
+    xc = xh.reshape(B, nc, C, H, P).transpose(1, 0, 3, 2, 4)    # (nc,B,H,C,P)
+    dac = da.reshape(B, nc, C, H).transpose(1, 0, 3, 2)         # (nc,B,H,C)
+    Bc = Bm.reshape(B, nc, C, -1).transpose(1, 0, 2, 3)         # (nc,B,C,N)
+    Cc = Cm.reshape(B, nc, C, -1).transpose(1, 0, 2, 3)
+
+    mask = jnp.tril(jnp.ones((C, C), bool))                     # s <= t
+
+    def step(h, xs):
+        x_, da_, B_, C_ = xs
+        x_ = x_.astype(jnp.float32)
+        B_, C_ = B_.astype(jnp.float32), C_.astype(jnp.float32)
+        cum = jnp.cumsum(da_, axis=-1)                          # (B,H,C)
+        # cross-chunk
+        y = jnp.einsum("btn,bhpn,bht->bhtp", C_, h, jnp.exp(cum))
+        # intra-chunk
+        g = jnp.einsum("btn,bsn->bts", C_, B_)                  # (B,C,C)
+        diff = cum[:, :, :, None] - cum[:, :, None, :]          # (B,H,t,s)
+        ldec = jnp.where(mask[None, None], jnp.exp(diff), 0.0)
+        y = y + jnp.einsum("bts,bhts,bhsp->bhtp", g, ldec, x_)
+        # state update
+        dtot = jnp.exp(cum[:, :, -1])                           # (B,H)
+        kdec = jnp.exp(cum[:, :, -1:] - cum)                    # (B,H,C)
+        h = dtot[..., None, None] * h + \
+            jnp.einsum("bhs,bhsp,bsn->bhpn", kdec, x_, B_)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0, (xc, dac, Bc, Cc),
+                         unroll=True if unroll else 1)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Sp, H, P)[:, :S]
+    return y, h
+
+
+def block(cfg: ModelConfig, lp, x: jax.Array, state: MambaState, tp: int,
+          single_token: bool) -> Tuple[jax.Array, MambaState]:
+    """One Mamba2 block with residual. x: (B,S,d)."""
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    P, N = s.head_dim, s.d_state
+    B_, S_, _ = x.shape
+
+    xn = rms_norm(x, lp["ln"], cfg.rms_eps)
+    z = jnp.einsum("bsd,de->bse", xn, lp["w_z"])
+    xi = jnp.einsum("bsd,de->bse", xn, lp["w_x"])
+    Bm = jnp.einsum("bsd,dn->bsn", xn, lp["w_B"])
+    Cm = jnp.einsum("bsd,dn->bsn", xn, lp["w_C"])
+    dt = jnp.einsum("bsd,dh->bsh", xn, lp["w_dt"])
+    xi = shd.shard(xi, "batch", None, "tp")
+
+    conv_in = jnp.concatenate([xi, Bm, Cm], axis=-1)
+    conv_w = jnp.concatenate([lp["conv_x"], lp["conv_B"], lp["conv_C"]],
+                             axis=-1)
+    if single_token:
+        window = jnp.concatenate(
+            [state.conv.astype(conv_in.dtype), conv_in], axis=1)
+        conv_out = jnp.einsum("bkc,kc->bc", window, conv_w)[:, None]
+        new_conv = window[:, 1:].astype(jnp.float32)
+    else:
+        conv_out = _causal_conv(conv_in, conv_w, state.conv)
+        new_conv = conv_in[:, -(s.d_conv - 1):].astype(jnp.float32)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bm, Cm = jnp.split(conv_out, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])
+    A = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    da = dt * A                                                 # (B,S,H) <= 0
+    xh = (xi * 1.0).reshape(B_, S_, nh, P)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+
+    if single_token:
+        # h' = exp(da) h + dt x (x) B ; y = C.h' + D x
+        h = jnp.exp(da[:, 0])[..., None, None] * state.h + \
+            jnp.einsum("bhp,bn->bhpn", xdt[:, 0], Bm[:, 0].astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(jnp.float32), h)[:, None]
+        y = y.reshape(B_, 1, nh, P)
+    else:
+        y, h = _ssd_chunked(xdt, Bm, Cm, da, state.h, s.chunk,
+                            unroll=cfg.unroll_scans)
+
+    y = y + xh.astype(jnp.float32) * lp["D"][None, None, :, None]
+    y = y.reshape(B_, S_, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, lp["gn"], cfg.rms_eps)
+    y = shd.shard(y, "batch", None, "tp")
+    out = jnp.einsum("bse,ed->bsd", y, lp["w_out"])
+    return shd.shard(x + out, "batch", None, None), MambaState(conv=new_conv, h=h)

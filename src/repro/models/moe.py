@@ -1,0 +1,127 @@
+"""Mixture-of-experts FFN (GShard/Switch-style dense dispatch).
+
+Two sharding modes, chosen per-arch by divisibility against the TP degree:
+  * EP  — experts sharded over the ``model`` axis (deepseek-moe: 64 % 16 == 0).
+          The combine einsum contracts the sharded expert dim -> one
+          all-reduce over ``model`` (the SPMD analogue of the MoE all-to-all).
+  * TPF — experts replicated, per-expert d_ff sharded over ``model``
+          (granite-moe: 40 experts don't divide 16, but d_ff=512 does).
+
+Token-choice top-k routing with per-group capacity; dropped tokens fall
+through on the residual path.  Groups are seq-chunks so the capacity cumsum
+never crosses a sharded dim during training/prefill.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PSpec
+from repro.runtime import sharding as shd
+
+GROUP = 256  # tokens per routing group (capacity granularity)
+
+
+def use_ep(cfg: ModelConfig, tp: int) -> bool:
+    return tp > 1 and cfg.moe.n_experts % tp == 0
+
+
+def moe_specs(cfg: ModelConfig, tp: int, prefix_layers: Tuple[int, ...] = ()
+              ) -> Dict[str, PSpec]:
+    m, d = cfg.moe, cfg.d_model
+    L = prefix_layers
+    lax_ = tuple("layers" for _ in L)
+    e_ax = ("experts", "fsdp", None) if use_ep(cfg, tp) else (None, "fsdp", "tp")
+    eo_ax = ("experts", None, "fsdp") if use_ep(cfg, tp) else (None, "tp", "fsdp")
+    sp = {
+        "router": PSpec(L + (d, m.n_experts), lax_ + ("fsdp", None), init="small"),
+        "w_gate": PSpec(L + (m.n_experts, d, m.expert_d_ff), lax_ + e_ax),
+        "w_in": PSpec(L + (m.n_experts, d, m.expert_d_ff), lax_ + e_ax),
+        "w_out": PSpec(L + (m.n_experts, m.expert_d_ff, d), lax_ + eo_ax),
+    }
+    if m.n_shared_experts:
+        ff = m.n_shared_experts * (m.shared_d_ff or m.expert_d_ff)
+        sp["ws_gate"] = PSpec(L + (d, ff), lax_ + ("fsdp", "tp"))
+        sp["ws_in"] = PSpec(L + (d, ff), lax_ + ("fsdp", "tp"))
+        sp["ws_out"] = PSpec(L + (ff, d), lax_ + ("tp", "fsdp"))
+    return sp
+
+
+def _route(cfg: ModelConfig, router_w, xg: jax.Array,
+           dropless: bool = False):
+    """xg: (..., G, d) -> combine (..., G, E, C), dispatch bools, aux losses."""
+    m = cfg.moe
+    G = xg.shape[-2]
+    if dropless:
+        cap = G  # decode: a dropped token is a corrupted output
+    else:
+        cap = max(int(m.capacity_factor * m.top_k * G / m.n_experts), 1)
+    rdt = jnp.dtype(m.route_dtype)  # f32 baseline / bf16 (int-exact <= 256)
+
+    logits = jnp.einsum("...gd,de->...ge", xg.astype(jnp.float32), router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, m.top_k)           # (..., G, k)
+
+    # Accumulate the (..., G, E, C) combine tensor one k-slice at a time so
+    # the (..., G, k, E, C) outer product never materializes.  top-1
+    # assignments win expert capacity over top-2, etc.
+    combine = jnp.zeros(xg.shape[:-1] + (m.n_experts, cap), rdt)
+    filled = jnp.zeros(xg.shape[:-2] + (m.n_experts,), rdt)
+    oh_sum = jnp.zeros(xg.shape[:-2] + (m.n_experts,), jnp.float32)
+    for kk in range(m.top_k):
+        oh = jax.nn.one_hot(idx[..., kk], m.n_experts, dtype=rdt)
+        pos = jnp.cumsum(oh, axis=-2) - 1.0 + filled[..., None, :]  # (...,G,E)
+        keep = (pos < cap) & (oh > 0)
+        slot = jnp.clip((pos * oh).sum(-1), 0, cap - 1).astype(jnp.int32)
+        slot_oh = jax.nn.one_hot(slot, cap, dtype=rdt)              # (...,G,C)
+        kept_gate = gate_vals[..., kk].astype(rdt) * keep.sum(-1)   # (...,G)
+        combine = combine + (oh * keep)[..., None] * \
+            (kept_gate[..., None] * slot_oh)[..., None, :]
+        filled = filled + oh.sum(axis=-2)
+        oh_sum = oh_sum + oh.sum(axis=-2).astype(jnp.float32)
+    dispatch = combine > 0
+
+    # aux losses (Switch-style load balance + router z-loss)
+    me = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    ce = oh_sum.mean(axis=tuple(range(oh_sum.ndim - 1))) / G * m.top_k
+    aux = m.n_experts * jnp.sum(me * ce) * m.aux_loss_coef
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_coef
+    return combine, dispatch, aux + zloss
+
+
+def moe_ffn(cfg: ModelConfig, p, x: jax.Array, tp: int
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).  Groups along seq (or batch if S==1)."""
+    B, S, d = x.shape
+    if S >= GROUP and S % GROUP == 0:
+        xg = x.reshape(B, S // GROUP, GROUP, d)
+        b_ax = "batch"      # group-batch dim n == batch rows
+        dropless = False
+    else:
+        xg = x.reshape(1, 1, B * S, d)  # decode / tiny shapes: one group
+        b_ax = None
+        dropless = True     # decode must not drop tokens
+    xg = shd.shard(xg, b_ax, None, None if b_ax else "batch", None)
+    combine, dispatch, aux = _route(cfg, p["router"], xg, dropless)
+    combine = shd.shard(combine, b_ax, None, None, None, None)
+    combine = combine.astype(x.dtype)
+
+    # dispatch: (n, g, G, E, C) x tokens (n, g, G, d) -> (n, g, E, C, d)
+    xe = jnp.einsum("ngtec,ngtd->ngecd", dispatch.astype(x.dtype), xg)
+    xe = shd.shard(xe, b_ax, None, "experts" if use_ep(cfg, tp) else None,
+                   None, None)
+    h = jnp.einsum("ngecd,edf->ngecf", xe, p["w_gate"])
+    u = jnp.einsum("ngecd,edf->ngecf", xe, p["w_in"])
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("ngecf,efd->ngecd", h, p["w_out"])
+    y = jnp.einsum("ngtec,ngecd->ngtd", combine, ye)
+    y = y.reshape(B, S, d)
+
+    if cfg.moe.n_shared_experts:
+        g = jnp.einsum("bsd,df->bsf", x, p["ws_gate"])
+        u2 = jnp.einsum("bsd,df->bsf", x, p["ws_in"])
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u2, p["ws_out"])
+    return shd.shard(y, "batch", None, None), aux

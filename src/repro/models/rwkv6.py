@@ -1,0 +1,237 @@
+"""RWKV-6 (Finch): data-dependent decay linear RNN [arXiv:2404.05892].
+
+Structure per layer: time-mix (WKV6 recurrence) + channel-mix, both with
+token-shift and the ddlerp dynamic mixing LoRA.  Recurrence per head:
+
+    S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+    y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+
+with w_t = exp(-exp(decay_t)) data-dependent per channel.  Training uses a
+chunk-parallel form (intra-chunk decay matrix in log space + cross-chunk
+state passing); decode carries (shift tokens, WKV state) only, so context
+length is unbounded — this is why rwkv6 runs the ``long_500k`` cell.
+
+TP note: 40 heads don't divide the 16-way model axis, so heads are padded to
+48 (zero in/out projections — wasted FLOPs visible in the roofline ratio).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import PSpec, rms_norm
+from repro.runtime import sharding as shd
+
+# WKV6 chunk length: the intra-chunk pairwise-decay tensor is
+# (B, H, C, C, N) f32, so C is the main activation-memory lever.
+CHUNK = 32
+
+
+def _round_up(x, m):
+    return ((x + m - 1) // m) * m
+
+
+def padded_rwkv_heads(cfg: ModelConfig, tp: int) -> int:
+    return _round_up(cfg.d_model // cfg.rwkv.head_size, tp) if tp > 1 else \
+        cfg.d_model // cfg.rwkv.head_size
+
+
+def layer_specs(cfg: ModelConfig, tp: int, L: int) -> Dict[str, Any]:
+    d, r = cfg.d_model, cfg.rwkv
+    hp = padded_rwkv_heads(cfg, tp)
+    da = hp * r.head_size  # padded attention width
+    lx = ("layers",)
+    return {
+        # time-mix
+        "mu_x": PSpec((L, d), lx + (None,), init="small"),
+        "mu": PSpec((L, 5, d), lx + (None, None), init="small"),
+        "mix_w1": PSpec((L, d, 5 * r.mix_lora), lx + ("fsdp", None), init="small"),
+        "mix_w2": PSpec((L, 5, r.mix_lora, d), lx + (None, None, None), init="small"),
+        "wr": PSpec((L, d, da), lx + ("fsdp", "tp")),
+        "wk": PSpec((L, d, da), lx + ("fsdp", "tp")),
+        "wv": PSpec((L, d, da), lx + ("fsdp", "tp")),
+        "wg": PSpec((L, d, da), lx + ("fsdp", "tp")),
+        "decay_mu": PSpec((L, da), lx + ("tp",), init="zeros"),
+        "dec_w1": PSpec((L, d, r.decay_lora), lx + ("fsdp", None), init="small"),
+        "dec_w2": PSpec((L, r.decay_lora, da), lx + (None, "tp"), init="small"),
+        "u": PSpec((L, da), lx + ("tp",), init="small"),
+        "wo": PSpec((L, da, d), lx + ("tp", "fsdp")),
+        "gn": PSpec((L, da), lx + ("tp",), init="ones"),
+        "ln1": PSpec((L, d), lx + (None,), init="ones"),
+        # channel-mix
+        "c_mu_k": PSpec((L, d), lx + (None,), init="small"),
+        "c_mu_r": PSpec((L, d), lx + (None,), init="small"),
+        "wck": PSpec((L, d, cfg.d_ff), lx + ("fsdp", "tp")),
+        "wcv": PSpec((L, cfg.d_ff, d), lx + ("tp", "fsdp")),
+        "wcr": PSpec((L, d, d), lx + ("fsdp", None)),
+        "ln2": PSpec((L, d), lx + (None,), init="ones"),
+    }
+
+
+class RWKVState(NamedTuple):
+    tshift: jax.Array   # (B, d) last token fed to time-mix
+    cshift: jax.Array   # (B, d) last token fed to channel-mix
+    wkv: jax.Array      # (B, Hp, N, N) f32 state
+
+
+def init_state(cfg: ModelConfig, batch: int, tp: int, stacked: int = 0
+               ) -> RWKVState:
+    hp = padded_rwkv_heads(cfg, tp)
+    n = cfg.rwkv.head_size
+    lead = (stacked,) if stacked else ()
+    return RWKVState(
+        tshift=jnp.zeros(lead + (batch, cfg.d_model), jnp.float32),
+        cshift=jnp.zeros(lead + (batch, cfg.d_model), jnp.float32),
+        wkv=jnp.zeros(lead + (batch, hp, n, n), jnp.float32),
+    )
+
+
+def _ddlerp(lp, x, xprev):
+    """Dynamic token-shift mixing -> the 5 mixed inputs (r,k,v,g,w)."""
+    delta = xprev - x
+    xxx = x + delta * lp["mu_x"]
+    lora = jnp.tanh(jnp.einsum("...d,dm->...m", xxx, lp["mix_w1"]))
+    lora = lora.reshape(*lora.shape[:-1], 5, -1)
+    dyn = jnp.einsum("...km,kmd->...kd", lora, lp["mix_w2"])  # (...,5,d)
+    mixed = x[..., None, :] + delta[..., None, :] * (lp["mu"] + dyn)
+    return [mixed[..., i, :] for i in range(5)]
+
+
+def _tmix_projections(cfg, lp, x, xprev, tp):
+    """Returns r,k,v,g: (B,S,Hp,N); logw: (B,S,Hp,N) (log decay <= 0)."""
+    n = cfg.rwkv.head_size
+    xr, xk, xv, xg, xw = _ddlerp(lp, x, xprev)
+    r = jnp.einsum("bsd,da->bsa", xr, lp["wr"])
+    k = jnp.einsum("bsd,da->bsa", xk, lp["wk"])
+    v = jnp.einsum("bsd,da->bsa", xv, lp["wv"])
+    g = jnp.einsum("bsd,da->bsa", xg, lp["wg"])
+    dec = lp["decay_mu"] + jnp.einsum(
+        "bsd,dm,ma->bsa", xw, lp["dec_w1"], lp["dec_w2"])
+    logw = -jnp.exp(dec.astype(jnp.float32))  # log w_t in (-inf, 0)
+    shp = (*r.shape[:-1], -1, n)
+    return (r.reshape(shp), k.reshape(shp), v.reshape(shp),
+            g, logw.reshape(shp))
+
+
+def _wkv_chunked(r, k, v, logw, u, state, unroll: bool = False):
+    """Chunk-parallel WKV6.  r/k/v/logw: (B,S,H,N) with S % CHUNK == 0.
+    state: (B,H,N,N) f32.  Returns (y (B,S,H,N), new state).
+    """
+    B, S, H, N = r.shape
+    C = min(CHUNK, S)
+    nc = -(-S // C)
+    Sp = nc * C
+    if Sp != S:  # zero-pad: k=0 adds nothing to state, logw=0 keeps decay 1
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        r, k, v, logw = pad(r), pad(k), pad(v), pad(logw)
+    rs = lambda a: a.reshape(B, nc, C, H, N).transpose(1, 0, 3, 2, 4)
+    r, k, v, logw = map(rs, (r, k, v, logw))          # (nc,B,H,C,N)
+    r, k, v = r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    uu = u.reshape(H, N)
+
+    def chunk(state, xs):
+        rc, kc, vc, lw = xs                            # (B,H,C,N)
+        cum = jnp.cumsum(lw, axis=2)                   # inclusive logs
+        cum_prev = cum - lw                            # exclusive
+        # cross-chunk: y_x[t] = (r_t * exp(cum_prev_t)) @ S0   (exp <= 1: safe)
+        rdec = rc * jnp.exp(cum_prev)
+        y = jnp.einsum("bhti,bhij->bhtj", rdec, state)
+        # intra-chunk: A[t,s] = sum_i r_t[i] k_s[i] exp(cum_prev_t - cum_s)[i]
+        # The difference is <= 0 for s < t, so exponentiate the *pairwise*
+        # log-space tensor (factorizing into exp(cum_prev_t)*exp(-cum_s)
+        # overflows for strong decays).
+        mask = jnp.tril(jnp.ones((C, C), bool), k=-1)
+        diff = cum_prev[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,H,t,s,N)
+        diff = jnp.where(mask[None, None, :, :, None], diff, -jnp.inf)
+        att = jnp.einsum("bhti,bhsi,bhtsi->bhts", rc, kc, jnp.exp(diff))
+        diag = jnp.einsum("bhti,bhti->bht", rc, kc * uu[None, :, None, :])
+        y = y + jnp.einsum("bhts,bhsj->bhtj", att, vc) + diag[..., None] * vc
+        # state update: S' = exp(cum_C) S0 + sum_s exp(cum_C - cum_s) k_s v_s
+        dtot = jnp.exp(cum[:, :, -1:, :])              # (B,H,1,N)
+        kdec = kc * jnp.exp(cum[:, :, -1:, :] - cum)
+        state = dtot.squeeze(2)[..., None] * state + \
+            jnp.einsum("bhsi,bhsj->bhij", kdec, vc)
+        return state, y
+
+    state, ys = jax.lax.scan(chunk, state, (r, k, v, logw),
+                             unroll=True if unroll else 1)
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, Sp, H, N)[:, :S]
+    return y, state
+
+
+def _wkv_step(r, k, v, logw, u, state):
+    """Single-token WKV. r/k/v/logw: (B,H,N); state (B,H,N,N)."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    uu = u.reshape(*u.shape[:-1], -1) if u.ndim == 1 else u
+    kv = k[..., :, None] * v[..., None, :]             # (B,H,N,N)
+    y = jnp.einsum("bhi,bhij->bhj", r, state + uu[None, :, :, None] * kv)
+    state = jnp.exp(logw)[..., None] * state + kv
+    return y, state
+
+
+def _group_norm(y, gamma, eps=1e-5):
+    """Per-head normalization. y: (..., H, N)."""
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    return (y - mu) * jax.lax.rsqrt(var + eps) * gamma
+
+
+def time_mix(cfg: ModelConfig, lp, x, state: RWKVState, tp: int,
+             single_token: bool) -> Tuple[jax.Array, RWKVState]:
+    B = x.shape[0]
+    n = cfg.rwkv.head_size
+    hp = padded_rwkv_heads(cfg, tp)
+    xn = rms_norm(x, lp["ln1"], cfg.rms_eps)
+    if single_token:
+        xprev = state.tshift[:, None, :].astype(xn.dtype)
+    else:
+        xprev = jnp.concatenate(
+            [state.tshift[:, None, :].astype(xn.dtype), xn[:, :-1]], axis=1)
+    r, k, v, g, logw = _tmix_projections(cfg, lp, xn, xprev, tp)
+    if single_token:
+        y, wkv = _wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0],
+                           lp["u"].reshape(hp, n), state.wkv)
+        y = y[:, None]
+    else:
+        y, wkv = _wkv_chunked(r, k, v, logw, lp["u"].reshape(hp, n), state.wkv,
+                              unroll=cfg.unroll_scans)
+    y = _group_norm(y, lp["gn"].reshape(hp, n)).astype(x.dtype)
+    y = y.reshape(*y.shape[:-2], hp * n) * jax.nn.silu(g)
+    y = shd.shard(y, "batch", None, "tp")
+    out = jnp.einsum("bsa,ad->bsd", y, lp["wo"])
+    new_state = RWKVState(tshift=xn[:, -1].astype(jnp.float32),
+                          cshift=state.cshift, wkv=wkv)
+    return out, new_state
+
+
+def channel_mix(cfg: ModelConfig, lp, x, state: RWKVState, tp: int,
+                single_token: bool) -> Tuple[jax.Array, RWKVState]:
+    xn = rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if single_token:
+        xprev = state.cshift[:, None, :].astype(xn.dtype)
+    else:
+        xprev = jnp.concatenate(
+            [state.cshift[:, None, :].astype(xn.dtype), xn[:, :-1]], axis=1)
+    delta = xprev - xn
+    xk = xn + delta * lp["c_mu_k"]
+    xr = xn + delta * lp["c_mu_r"]
+    kh = jnp.einsum("bsd,df->bsf", xk, lp["wck"])
+    kh = shd.shard(jnp.square(jax.nn.relu(kh)), "batch", None, "tp")
+    kv = jnp.einsum("bsf,fd->bsd", kh, lp["wcv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, lp["wcr"]))
+    new_state = RWKVState(tshift=state.tshift,
+                          cshift=xn[:, -1].astype(jnp.float32), wkv=state.wkv)
+    return rr * kv, new_state
+
+
+def block(cfg: ModelConfig, lp, x, state: RWKVState, tp: int,
+          single_token: bool) -> Tuple[jax.Array, RWKVState]:
+    y, state = time_mix(cfg, lp, x, state, tp, single_token)
+    x = shd.shard(x + y, "batch", None, None)
+    y, state = channel_mix(cfg, lp, x, state, tp, single_token)
+    return shd.shard(x + y, "batch", None, None), state

@@ -1,0 +1,280 @@
+"""Unified transformer LM: dense / moe / vlm / audio families.
+
+One block = preRMS -> attention -> residual -> preRMS -> FFN -> residual,
+with the FFN being dense SwiGLU or MoE.  Layers are stacked (leading dim L)
+and iterated with ``lax.scan`` so HLO size / compile time stay flat in depth
+(roofline terms are composed per-layer, see benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.common import PSpec, rms_norm, swiglu
+from repro.runtime import sharding as shd
+
+
+def _is_moe(cfg: ModelConfig) -> bool:
+    return cfg.family == "moe"
+
+
+# ---------------------------------------------------------------------------
+# specs
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, tp: int) -> Dict[str, Any]:
+    d, L = cfg.d_model, cfg.n_layers
+    vp = cfg.padded_vocab(tp)
+    layer: Dict[str, Any] = {
+        "attn": attn.attn_specs(cfg, tp, prefix_layers=(L,)),
+        "ln1": PSpec((L, d), ("layers", None), init="ones"),
+        "ln2": PSpec((L, d), ("layers", None), init="ones"),
+    }
+    if _is_moe(cfg):
+        layer["moe"] = moe_mod.moe_specs(cfg, tp, prefix_layers=(L,))
+    else:
+        layer["ffn"] = {
+            "w_gate": PSpec((L, d, cfg.d_ff), ("layers", "fsdp", "tp")),
+            "w_in": PSpec((L, d, cfg.d_ff), ("layers", "fsdp", "tp")),
+            "w_out": PSpec((L, cfg.d_ff, d), ("layers", "tp", "fsdp")),
+        }
+    sp: Dict[str, Any] = {
+        "embed": PSpec((vp, d), ("tp", "fsdp"), init="small"),
+        "layers": layer,
+        "final_norm": PSpec((d,), (None,), init="ones"),
+    }
+    if cfg.frontend != "none":
+        sp["frontend_proj"] = PSpec((d, d), ("fsdp", None))
+        if cfg.family == "audio":
+            sp["mask_embed"] = PSpec((d,), (None,), init="small")
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = PSpec((d, vp), ("fsdp", "tp"), init="small")
+    return sp
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _block_train(cfg: ModelConfig, tp: int, prefix_len: int,
+                 x: jax.Array, positions: jax.Array, lp) -> Tuple[jax.Array, jax.Array]:
+    """One layer, full-sequence. Returns (x, aux_loss)."""
+    h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+    x = x + attn.full_attention(cfg, lp["attn"], h, positions, tp, prefix_len)
+    x = shd.shard(x, "batch", None, None)
+    h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if _is_moe(cfg):
+        y, aux = moe_mod.moe_ffn(cfg, lp["moe"], h, tp)
+    else:
+        f = lp["ffn"]
+        y = swiglu(h, f["w_gate"], f["w_in"], f["w_out"],
+                   act="gelu" if cfg.family == "vlm" else "silu")
+        aux = jnp.zeros((), jnp.float32)
+    x = x + y
+    return shd.shard(x, "batch", None, None), aux
+
+
+def _block_decode(cfg: ModelConfig, tp: int, x, pos, lp, cache):
+    h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+    y, cache = attn.decode_attention(cfg, lp["attn"], h, pos, tp, cache)
+    x = x + y
+    h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if _is_moe(cfg):
+        y, _ = moe_mod.moe_ffn(cfg, lp["moe"], h, tp)
+    else:
+        f = lp["ffn"]
+        y = swiglu(h, f["w_gate"], f["w_in"], f["w_out"],
+                   act="gelu" if cfg.family == "vlm" else "silu")
+    return x + y, cache
+
+
+def _block_prefill(cfg: ModelConfig, tp: int, prefix_len, x, positions, lp, cache):
+    h = rms_norm(x, lp["ln1"], cfg.rms_eps)
+    y, cache = attn.prefill_attention(cfg, lp["attn"], h, positions, tp, cache,
+                                      prefix_len)
+    x = x + y
+    h = rms_norm(x, lp["ln2"], cfg.rms_eps)
+    if _is_moe(cfg):
+        y, _ = moe_mod.moe_ffn(cfg, lp["moe"], h, tp)
+    else:
+        f = lp["ffn"]
+        y = swiglu(h, f["w_gate"], f["w_in"], f["w_out"],
+                   act="gelu" if cfg.family == "vlm" else "silu")
+    return x + y, cache
+
+
+def _scan_layers(cfg: ModelConfig, body, x, layers, *extra):
+    """Scan `body` over stacked layer params (+ optional stacked cache)."""
+    if cfg.scan_layers:
+        def step(carry, xs):
+            lp = xs[0]
+            out = body(carry, lp, *xs[1:])
+            if isinstance(out, tuple):
+                return out[0], out[1:]
+            return out, ()
+        fn = jax.checkpoint(step) if cfg.remat else step
+        carry, ys = jax.lax.scan(fn, x, (layers,) + extra)
+        return carry, ys
+    carry = x
+    ys = []
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], layers)
+        ex = tuple(jax.tree.map(lambda a: a[i], e) for e in extra)
+        out = body(carry, lp, *ex)
+        if isinstance(out, tuple):
+            carry, y = out[0], out[1:]
+        else:
+            carry, y = out, ()
+        ys.append(y)
+    if ys and ys[0]:
+        ys = tuple(jax.tree.map(lambda *a: jnp.stack(a), *[y[i] for y in ys])
+                   for i in range(len(ys[0])))
+    else:
+        ys = ()
+    return carry, ys
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, p, batch: Dict[str, jax.Array], tp: int
+                 ) -> Tuple[jax.Array, int]:
+    """Returns (x (B,S,d), prefix_len)."""
+    d = cfg.d_model
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"]                  # (B, Np, d)
+        front = jnp.einsum("bpd,de->bpe", patches, p["frontend_proj"])
+        tok = jnp.take(p["embed"], batch["tokens"], axis=0) * (d ** 0.5)
+        x = jnp.concatenate([front.astype(tok.dtype), tok], axis=1)
+        return shd.shard(x, "batch", None, None), patches.shape[1]
+    if cfg.family == "audio":
+        frames = batch["frames"]                         # (B, S, d)
+        x = jnp.einsum("bsd,de->bse", frames, p["frontend_proj"])
+        if "mask" in batch:
+            x = jnp.where(batch["mask"][..., None], p["mask_embed"], x)
+        return shd.shard(x, "batch", None, None), 0
+    x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    return shd.shard(x, "batch", None, None), 0
+
+
+def lm_head(cfg: ModelConfig, p, x: jax.Array) -> jax.Array:
+    w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("...d,dv->...v", x, w)
+    return shd.shard(logits, "batch", None, "tp") if logits.ndim == 3 else \
+        shd.shard(logits, "batch", "tp")
+
+
+def forward_train(cfg: ModelConfig, p, batch, tp: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (features (B,S,d), aux_loss, prefix_len-as-array-free int)."""
+    x, prefix_len = embed_inputs(cfg, p, batch, tp)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    body = functools.partial(_block_train, cfg, tp, prefix_len)
+
+    def step(carry, lp):
+        y, aux = body(carry, positions, lp)
+        return y, aux
+    x, auxes = _scan_layers(cfg, lambda c, lp: step(c, lp), x, p["layers"])
+    aux = jnp.sum(auxes[0]) if auxes else jnp.zeros((), jnp.float32)
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    return x, aux, prefix_len
+
+
+def loss_fn(cfg: ModelConfig, p, batch, tp: int, loss_chunk: int = 512
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Causal-LM (or masked-prediction) loss with seq-chunked head.
+
+    The (B, S, V) logits never materialize: the head matmul + CE run per
+    seq-chunk inside a scan (vocab up to 257k at bf16 would otherwise
+    dominate activation memory).
+    """
+    x, aux, prefix_len = forward_train(cfg, p, batch, tp)
+    B, S, d = x.shape
+    vp = cfg.padded_vocab(tp)
+
+    if cfg.family == "audio":
+        labels = batch["labels"]
+        mask = batch["mask"].astype(jnp.float32)
+    elif cfg.family == "vlm":
+        tok = batch["tokens"]
+        labels = jnp.pad(tok[:, 1:], ((0, 0), (0, 1)))  # next-token over text
+        labels = jnp.pad(labels, ((0, 0), (prefix_len, 0)))[:, :S]
+        mask = jnp.zeros((B, S), jnp.float32).at[:, prefix_len:-1].set(1.0)
+    else:
+        tok = batch["tokens"]
+        labels = jnp.pad(tok[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.pad(jnp.ones((B, S - 1), jnp.float32), ((0, 0), (0, 1)))
+
+    C = min(loss_chunk, S)
+    n = S // C
+    head_w = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+
+    def chunk_loss(_, xs):
+        xc, lc, mc = xs                                  # (B,C,d) (B,C) (B,C)
+        logits = jnp.einsum("bcd,dv->bcv", xc, head_w).astype(jnp.float32)
+        logits = shd.shard(logits, "batch", None, "tp")
+        if vp > cfg.vocab_size:
+            bias = jnp.concatenate([jnp.zeros((cfg.vocab_size,), jnp.float32),
+                                    jnp.full((vp - cfg.vocab_size,), -1e9)])
+            logits = logits + bias
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, vp, dtype=jnp.float32)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        nll = (lse - gold) * mc
+        return None, (jnp.sum(nll), jnp.sum(mc))
+
+    xs = (x.reshape(B, n, C, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, C).transpose(1, 0, 2),
+          mask.reshape(B, n, C).transpose(1, 0, 2))
+    _, (nll_sum, m_sum) = jax.lax.scan(chunk_loss, None, xs,
+                                       unroll=True if cfg.unroll_scans else 1)
+    loss = jnp.sum(nll_sum) / jnp.maximum(jnp.sum(m_sum), 1.0)
+    metrics = {"ce_loss": loss, "aux_loss": aux}
+    return loss + aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+               dtype=jnp.bfloat16) -> attn.KVCache:
+    return attn.init_cache(cfg, batch, max_len, tp, dtype, stacked=cfg.n_layers)
+
+
+def serve_prefill(cfg, p, batch, tp: int, cache):
+    """Process the prompt; returns (last-position logits (B, V), cache)."""
+    x, prefix_len = embed_inputs(cfg, p, batch, tp)
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(c, lp, cache_l):
+        return _block_prefill(cfg, tp, prefix_len, c, positions, lp, cache_l)
+    x, ys = _scan_layers(cfg, body, x, p["layers"], cache)
+    new_cache = ys[0]
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    return lm_head(cfg, p, x[:, -1]), new_cache
+
+
+def serve_step(cfg: ModelConfig, p, tokens: jax.Array, pos: jax.Array,
+               tp: int, cache) -> Tuple[jax.Array, Any]:
+    """One decode step. tokens: (B,) int32; pos: scalar int32."""
+    x = jnp.take(p["embed"], tokens[:, None], axis=0)
+    if cfg.family == "vlm":
+        x = x * (cfg.d_model ** 0.5)
+    x = shd.shard(x, "batch", None, None)
+
+    def body(c, lp, cache_l):
+        return _block_decode(cfg, tp, c, pos, lp, cache_l)
+    x, ys = _scan_layers(cfg, body, x, p["layers"], cache)
+    new_cache = ys[0]
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    return lm_head(cfg, p, x[:, -1]), new_cache

@@ -1,0 +1,184 @@
+"""Zamba2 hybrid: Mamba2 backbone + ONE shared attention block applied every
+``attn_every`` layers with the same weights (Zamba2's parameter sharing).
+
+The backbone scans over groups of ``attn_every`` Mamba2 layers; between
+groups the shared full-attention (+SwiGLU) block runs unrolled (its params
+are shared, so HLO stays small).  Decode carries per-layer Mamba states plus
+one KV cache per shared-block application point.
+
+Simplifications vs. the released checkpoints (recorded in DESIGN.md):
+the shared block consumes the running stream x rather than concat(x, x_emb),
+and per-application LoRA deltas on the shared weights are omitted.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.common import PSpec, rms_norm, swiglu
+from repro.runtime import sharding as shd
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def param_specs(cfg: ModelConfig, tp: int) -> Dict[str, Any]:
+    d, L = cfg.d_model, cfg.n_layers
+    vp = cfg.padded_vocab(tp)
+    return {
+        "embed": PSpec((vp, d), ("tp", "fsdp"), init="small"),
+        "backbone": mamba2.layer_specs(cfg, tp, L),
+        "shared": {
+            "attn": attn.attn_specs(cfg, tp),
+            "ln1": PSpec((d,), (None,), init="ones"),
+            "ln2": PSpec((d,), (None,), init="ones"),
+            "ffn": {
+                "w_gate": PSpec((d, cfg.d_ff), ("fsdp", "tp")),
+                "w_in": PSpec((d, cfg.d_ff), ("fsdp", "tp")),
+                "w_out": PSpec((cfg.d_ff, d), ("tp", "fsdp")),
+            },
+        },
+        "final_norm": PSpec((d,), (None,), init="ones"),
+        "lm_head": PSpec((d, vp), ("fsdp", "tp"), init="small"),
+    }
+
+
+class ZambaCache(NamedTuple):
+    mamba: mamba2.MambaState      # stacked (L, ...)
+    kv: attn.KVCache              # stacked (n_apps, ...)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int,
+               dtype=jnp.bfloat16) -> ZambaCache:
+    return ZambaCache(
+        mamba=mamba2.init_state(cfg, batch, stacked=cfg.n_layers),
+        kv=attn.init_cache(cfg, batch, max_len, tp, dtype,
+                           stacked=n_attn_apps(cfg)),
+    )
+
+
+def _shared_block(cfg, sp, x, positions, tp, mode, kv_cache=None, pos=None):
+    h = rms_norm(x, sp["ln1"], cfg.rms_eps)
+    if mode == "train":
+        y = attn.full_attention(cfg, sp["attn"], h, positions, tp)
+        new_cache = None
+    elif mode == "prefill":
+        y, new_cache = attn.prefill_attention(cfg, sp["attn"], h, positions,
+                                              tp, kv_cache)
+    else:
+        y, new_cache = attn.decode_attention(cfg, sp["attn"], h, pos, tp,
+                                             kv_cache)
+    x = x + y
+    h = rms_norm(x, sp["ln2"], cfg.rms_eps)
+    f = sp["ffn"]
+    x = x + swiglu(h, f["w_gate"], f["w_in"], f["w_out"])
+    return shd.shard(x, "batch", None, None), new_cache
+
+
+def _run(cfg: ModelConfig, p, x, tp: int, mode: str,
+         cache: ZambaCache = None, pos=None):
+    """Shared forward over modes. x: (B,S,d). Returns (x, new_cache)."""
+    S = x.shape[1]
+    every = cfg.attn_every
+    napps = n_attn_apps(cfg)
+    positions = jnp.arange(S, dtype=jnp.int32) if mode != "decode" else None
+    single = mode == "decode"
+
+    # reshape stacked backbone params/state (L, ...) -> (napps, every, ...)
+    grp = lambda t: jax.tree.map(
+        lambda a: a.reshape(napps, every, *a.shape[1:]), t)
+    backbone = grp(p["backbone"])
+    mstates = grp(cache.mamba) if cache is not None else grp(
+        mamba2.init_state(cfg, x.shape[0], stacked=cfg.n_layers))
+
+    def mamba_step(carry, xs):
+        lp, st = xs
+        y, st = mamba2.block(cfg, lp, carry, st, tp, single)
+        return y, st
+    mamba_step = jax.checkpoint(mamba_step) if cfg.remat else mamba_step
+
+    new_mstates, new_kvs = [], []
+    for g in range(napps):
+        grp_params = jax.tree.map(lambda a: a[g], backbone)
+        grp_state = jax.tree.map(lambda a: a[g], mstates)
+        x, st = jax.lax.scan(mamba_step, x, (grp_params, grp_state))
+        new_mstates.append(st)
+        kv_g = jax.tree.map(lambda a: a[g], cache.kv) if cache is not None \
+            else None
+        kv_g = attn.KVCache(*kv_g) if kv_g is not None else None
+        x, kv_new = _shared_block(cfg, p["shared"], x, positions, tp, mode,
+                                  kv_g, pos)
+        new_kvs.append(kv_new)
+
+    new_cache = None
+    if mode != "train":
+        # each group state is (every, ...) -> concat to (L, ...)
+        mstacked = jax.tree.map(lambda *a: jnp.concatenate(a, axis=0),
+                                *new_mstates)
+        kvstacked = jax.tree.map(lambda *a: jnp.stack(a, axis=0), *new_kvs)
+        new_cache = ZambaCache(mamba=mstacked, kv=kvstacked)
+    return x, new_cache
+
+
+def loss_fn(cfg: ModelConfig, p, batch, tp: int):
+    tokens = batch["tokens"]
+    x = jnp.take(p["embed"], tokens, axis=0)
+    x = shd.shard(x, "batch", None, None)
+    x, _ = _run(cfg, p, x, tp, "train")
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    return _chunked_ce(cfg, x, p["lm_head"], tokens, tp)
+
+
+def _chunked_ce(cfg, x, head_w, tokens, tp, loss_chunk: int = 512):
+    B, S, d = x.shape
+    vp = cfg.padded_vocab(tp)
+    labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+    mask = jnp.pad(jnp.ones((B, S - 1), jnp.float32), ((0, 0), (0, 1)))
+    C = min(loss_chunk, S)
+    n = S // C
+
+    def chunk_loss(_, xs):
+        xc, lc, mc = xs
+        logits = jnp.einsum("bcd,dv->bcv", xc, head_w).astype(jnp.float32)
+        logits = shd.shard(logits, "batch", None, "tp")
+        if vp > cfg.vocab_size:
+            bias = jnp.concatenate([jnp.zeros((cfg.vocab_size,), jnp.float32),
+                                    jnp.full((vp - cfg.vocab_size,), -1e9)])
+            logits = logits + bias
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lc, vp, dtype=jnp.float32)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        return None, (jnp.sum((lse - gold) * mc), jnp.sum(mc))
+
+    xs = (x.reshape(B, n, C, d).transpose(1, 0, 2, 3),
+          labels.reshape(B, n, C).transpose(1, 0, 2),
+          mask.reshape(B, n, C).transpose(1, 0, 2))
+    _, (nll, m) = jax.lax.scan(chunk_loss, None, xs,
+                               unroll=True if cfg.unroll_scans else 1)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(m), 1.0)
+    return loss, {"ce_loss": loss}
+
+
+def serve_prefill(cfg: ModelConfig, p, batch, tp: int, cache: ZambaCache):
+    x = jnp.take(p["embed"], batch["tokens"], axis=0)
+    x = shd.shard(x, "batch", None, None)
+    x, new_cache = _run(cfg, p, x, tp, "prefill", cache)
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], p["lm_head"])
+    return shd.shard(logits, "batch", "tp"), new_cache
+
+
+def serve_step(cfg: ModelConfig, p, tokens, pos, tp: int, cache: ZambaCache):
+    x = jnp.take(p["embed"], tokens[:, None], axis=0)
+    x = shd.shard(x, "batch", None, None)
+    x, new_cache = _run(cfg, p, x, tp, "decode", cache, pos=pos)
+    x = rms_norm(x, p["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], p["lm_head"])
+    return shd.shard(logits, "batch", "tp"), new_cache

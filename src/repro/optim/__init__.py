@@ -1,0 +1,2 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, adam, adamw, sgd, cosine_schedule, global_norm)

@@ -1,0 +1,115 @@
+"""Pure-JAX optimizers (no optax dependency): SGD(+momentum), Adam, AdamW.
+
+API mirrors the usual gradient-transform style:
+
+    opt = adamw(lr=3e-4, weight_decay=0.1)
+    state = opt.init(params)
+    params, state = opt.step(params, grads, state, lr_scale=1.0)
+
+Optimizer state is a pytree matching ``params`` — it shards the same way
+(ZeRO-1: the train driver places it with the FSDP axes of the params).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    step: Callable[..., Tuple[Any, Any]]
+    name: str
+
+
+def _tree_zeros_like(params, dtype=None):
+    return jax.tree.map(
+        lambda p: jnp.zeros_like(p, dtype=dtype or p.dtype), params)
+
+
+def sgd(lr: float, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return {"count": jnp.zeros((), jnp.int32)}
+        return {"mu": _tree_zeros_like(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def step(params, grads, state, lr_scale=1.0):
+        eta = lr * lr_scale
+        if momentum == 0.0:
+            new_p = jax.tree.map(lambda p, g: p - eta * g, params, grads)
+            return new_p, {"count": state["count"] + 1}
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+        else:
+            upd = mu
+        new_p = jax.tree.map(lambda p, u: p - eta * u, params, upd)
+        return new_p, {"mu": mu, "count": state["count"] + 1}
+
+    return Optimizer(init, step, "sgd")
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, grad_clip: Optional[float] = None
+          ) -> Optimizer:
+    def init(params):
+        return {
+            "m": _tree_zeros_like(params, jnp.float32),
+            "v": _tree_zeros_like(params, jnp.float32),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def step(params, grads, state, lr_scale=1.0):
+        if grad_clip is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ +
+                         (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        eta = lr * lr_scale
+
+        def upd(p, m_, v_):
+            u = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * u).astype(p.dtype)
+
+        new_p = jax.tree.map(upd, params, m, v)
+        return new_p, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, step, "adamw")
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+         ) -> Optimizer:
+    return adamw(lr, b1, b2, eps, weight_decay=0.0)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return fn

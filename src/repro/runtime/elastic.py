@@ -1,0 +1,67 @@
+"""Elastic scaling: reshard training state when the device pool changes.
+
+When a pod (tier) is lost or regained, FedAT keeps training: the tier map
+shrinks/grows and the cross-tier weights renormalize (Eq. 3 is defined for
+any M).  This module handles the mechanical part — moving a state pytree
+onto a *new* mesh:
+
+  * ``reshard(tree, new_shardings)``: device_put every leaf to its sharding
+    on the new mesh (jax moves/reshuffles data as needed);
+  * ``shrink_pods / grow_pods``: adjust the pod-stacked leading dim of a
+    multi-pod FedAT state (dropping a tier keeps the survivors' models;
+    adding a tier bootstraps the newcomer from the Eq. 3 global model);
+  * update-count bookkeeping so aggregation weights stay consistent.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import aggregation
+
+
+def reshard(tree: Any, new_shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s) if s is not None else x,
+        tree, new_shardings)
+
+
+def shrink_pods(state: dict, keep: list) -> dict:
+    """Drop lost tiers. ``keep``: surviving pod indices (e.g. [0, 2, 3])."""
+    idx = jnp.asarray(keep)
+
+    def take(x):
+        return jnp.take(x, idx, axis=0)
+
+    return {
+        "params": jax.tree.map(take, state["params"]),
+        "opt": jax.tree.map(take, state["opt"]),
+        "step": take(state["step"]),
+        "counts": take(state["counts"]),
+    }
+
+
+def grow_pods(state: dict, n_new: int) -> dict:
+    """Add tiers: newcomers start from the current Eq. 3 global model with
+    zero update count (they are 'slowest' until they catch up)."""
+    w_global = aggregation.global_model(state["params"], state["counts"])
+    opt0 = jax.tree.map(lambda x: jnp.zeros_like(x[:1]), state["opt"])
+
+    def extend(stacked, new_single):
+        rep = jnp.broadcast_to(new_single[None],
+                               (n_new,) + new_single.shape)
+        return jnp.concatenate([stacked, rep.astype(stacked.dtype)], axis=0)
+
+    params = jax.tree.map(extend, state["params"], w_global)
+    opt = jax.tree.map(
+        lambda s, z: jnp.concatenate(
+            [s] + [z.astype(s.dtype)] * n_new, axis=0),
+        state["opt"], opt0)
+    step = jnp.concatenate(
+        [state["step"], jnp.full((n_new,), int(jnp.max(state["step"])),
+                                 state["step"].dtype)])
+    counts = jnp.concatenate(
+        [state["counts"], jnp.zeros((n_new,), state["counts"].dtype)])
+    return {"params": params, "opt": opt, "step": step, "counts": counts}

@@ -1,0 +1,77 @@
+"""FedAT aggregation invariants (Eq. 3 / Eq. 4 / Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+
+class TestCrossTierWeights:
+    def test_sums_to_one(self):
+        w = agg.cross_tier_weights(jnp.array([5.0, 3.0, 1.0]))
+        assert np.isclose(float(jnp.sum(w)), 1.0)
+
+    def test_reversal(self):
+        # tier m gets the count of tier M+1-m (Eq. 3)
+        counts = jnp.array([6.0, 3.0, 1.0])
+        w = agg.cross_tier_weights(counts)
+        np.testing.assert_allclose(np.asarray(w), [0.1, 0.3, 0.6], atol=1e-6)
+
+    def test_zero_counts_uniform(self):
+        w = agg.cross_tier_weights(jnp.zeros(4))
+        np.testing.assert_allclose(np.asarray(w), 0.25, atol=1e-6)
+
+    def test_slowest_gets_largest_weight(self):
+        # faster tiers have higher counts -> slower tiers get bigger weights
+        counts = jnp.array([10.0, 7.0, 4.0, 2.0, 1.0])
+        w = np.asarray(agg.cross_tier_weights(counts))
+        assert np.all(np.diff(w) > 0)
+
+    @given(st.lists(st.integers(0, 1000), min_size=2, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_property_simplex(self, counts):
+        w = np.asarray(agg.cross_tier_weights(jnp.asarray(counts, jnp.float32)))
+        assert np.all(w >= 0)
+        assert np.isclose(w.sum(), 1.0, atol=1e-5)
+
+    @given(st.lists(st.integers(1, 1000), min_size=2, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_property_reversal(self, counts):
+        w = np.asarray(agg.cross_tier_weights(jnp.asarray(counts, jnp.float32)))
+        expect = np.asarray(counts, np.float64)[::-1] / np.sum(counts)
+        np.testing.assert_allclose(w, expect, atol=1e-5)
+
+
+class TestWeightedAverage:
+    def test_matches_manual(self):
+        models = {"w": jnp.arange(12.0).reshape(3, 4)}
+        weights = jnp.array([0.5, 0.25, 0.25])
+        out = agg.weighted_average(models, weights)
+        expect = 0.5 * models["w"][0] + 0.25 * models["w"][1] + \
+            0.25 * models["w"][2]
+        np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(expect))
+
+    def test_intra_tier_sample_weighting(self):
+        # Eq. 4: client k weighted by n_k / N_c
+        models = {"w": jnp.stack([jnp.ones(3), 3 * jnp.ones(3)])}
+        out = agg.intra_tier_average(models, jnp.array([10, 30]))
+        np.testing.assert_allclose(np.asarray(out["w"]), 2.5)
+
+    def test_identity_single_tier(self):
+        models = {"w": jnp.ones((1, 5)) * 7}
+        out = agg.global_model(models, jnp.array([3.0]))
+        np.testing.assert_allclose(np.asarray(out["w"]), 7.0)
+
+    def test_permutation_consistency(self):
+        # aggregating permuted tiers with permuted counts gives same result
+        rng = np.random.default_rng(0)
+        leaves = rng.normal(size=(4, 6)).astype(np.float32)
+        counts = np.array([8.0, 4.0, 2.0, 1.0], np.float32)
+        out = agg.global_model({"w": jnp.asarray(leaves)}, jnp.asarray(counts))
+        # reversal-aware permutation: reversing both tiers and counts
+        out2 = agg.global_model({"w": jnp.asarray(leaves[::-1].copy())},
+                                jnp.asarray(counts[::-1].copy()))
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(out2["w"]), atol=1e-6)

@@ -1,0 +1,70 @@
+"""Checkpoint manager: roundtrip, retention, corruption fallback, async."""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _state(v):
+    return {"params": {"w": jnp.full((4, 4), float(v))},
+            "step": jnp.asarray(v, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(7, _state(7), blocking=True)
+    restored, step = mgr.restore(_state(0))
+    assert step == 7
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 7.0)
+
+
+def test_keep_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(s), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(5, _state(5), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 5
+
+
+def test_corruption_falls_back(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _state(1), blocking=True)
+    mgr.save(2, _state(2), blocking=True)
+    # corrupt the newest shard
+    shard = os.path.join(str(tmp_path), "step_0000000002", "shard_0.npz")
+    with open(shard, "r+b") as f:
+        f.seek(100)
+        f.write(b"\xde\xad\xbe\xef")
+    restored, step = mgr.restore(_state(0))
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]), 1.0)
+
+
+def test_restore_specific_step(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(s), blocking=True)
+    restored, step = mgr.restore(_state(0), step=2)
+    assert step == 2
+
+
+def test_no_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_state(0))
+
+
+def test_atomic_tmp_cleanup(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _state(1), blocking=True)
+    assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))

@@ -1,0 +1,89 @@
+"""Compression codecs: faithful polyline + TPU blockwise quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compress import polyline, quantize
+
+
+class TestPolyline:
+    def test_known_google_example(self):
+        # the reference values from Google's polyline documentation
+        # (lat and lng are separate delta streams there)
+        assert polyline.encode_values(np.array([38.5]), 5) == "_p~iF"
+        assert polyline.encode_values(np.array([-120.2]), 5) == "~ps|U"
+
+    def test_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        x = rng.normal(0, 2, 500).astype(np.float32)
+        for p in (3, 4, 6):
+            dec = polyline.decode_values(polyline.encode_values(x, p), p)
+            assert np.max(np.abs(dec - x)) <= 0.5 * 10 ** -p + 1e-9
+
+    @given(st.lists(st.floats(-100, 100, allow_nan=False, width=32),
+                    min_size=1, max_size=50),
+           st.integers(3, 6))
+    @settings(max_examples=50, deadline=None)
+    def test_property_roundtrip(self, vals, p):
+        x = np.asarray(vals, np.float32)
+        dec = polyline.decode_values(polyline.encode_values(x, p), p)
+        assert len(dec) == len(x)
+        # codec bound + f32 representation eps of the decoded magnitude
+        tol = 0.5 * 10 ** -p + np.abs(x).max() * 2.4e-7 + 1e-6
+        assert np.max(np.abs(dec - x)) <= tol
+
+    def test_marshal_unmarshal_tree(self):
+        tree = {"a": np.ones((3, 4), np.float32) * 0.12345,
+                "b": {"c": np.linspace(-1, 1, 7, dtype=np.float32)}}
+        msg = polyline.marshal(tree, precision=4)
+        rt = polyline.unmarshal(msg)
+        for k1, k2 in zip(jax.tree.leaves(tree), jax.tree.leaves(rt)):
+            assert k1.shape == k2.shape
+            assert np.max(np.abs(k1 - k2)) <= 5e-5 + 1e-9
+
+    def test_compression_ratio(self):
+        # small-magnitude deltas (typical trained weights) compress well
+        rng = np.random.default_rng(0)
+        w = (rng.normal(0, 0.05, 4096)).astype(np.float32)
+        msg = polyline.marshal({"w": w}, precision=4)
+        ratio = polyline.payload_bytes(msg) / polyline.raw_bytes({"w": w})
+        assert ratio < 0.8  # beats raw f32 wire
+
+
+class TestQuantize:
+    @given(st.integers(1, 2000), st.sampled_from([8, 16]))
+    @settings(max_examples=30, deadline=None)
+    def test_property_error_bound(self, n, bits):
+        rng = np.random.default_rng(n)
+        x = jnp.asarray(rng.normal(0, 3, n), jnp.float32)
+        c = quantize.compress(x, bits)
+        xr = quantize.decompress(c, (n,))
+        bound = np.asarray(quantize.error_bound(x, bits))
+        err_blocks = np.abs(np.asarray(xr - x))
+        pad = -(-n // quantize.BLOCK) * quantize.BLOCK
+        errp = np.zeros(pad)
+        errp[:n] = err_blocks
+        per_block = errp.reshape(-1, quantize.BLOCK).max(1)
+        assert np.all(per_block <= bound * (1 + 1e-4) + 1e-6)
+
+    def test_wire_bytes_ratio(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=65536),
+                        jnp.float32)
+        c = quantize.compress(x, 8)
+        assert quantize.wire_bytes(c) < 0.27 * x.size * 4  # ~3.9x vs f32
+
+    def test_tree_roundtrip(self):
+        tree = {"w": jnp.ones((130,)) * 0.5, "b": jnp.zeros((7,))}
+        msg = quantize.compress_tree(tree, 8)
+        rt = quantize.decompress_tree(msg)
+        np.testing.assert_allclose(np.asarray(rt["w"]), 0.5, atol=1e-2)
+        assert quantize.tree_wire_bytes(msg) > 0
+
+    def test_fake_quantize_identity_shape(self):
+        x = jnp.asarray(np.random.default_rng(1).normal(size=(5, 37)),
+                        jnp.float32)
+        y = quantize.fake_quantize(x, 8)
+        assert y.shape == x.shape
+        assert float(jnp.max(jnp.abs(y - x))) < 0.05

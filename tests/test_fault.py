@@ -1,0 +1,109 @@
+"""Fault-tolerance runtime: guarded steps, injected failures, stragglers,
+elastic pod scaling."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.fault import GuardedRunner, StragglerStats
+from repro.runtime import elastic
+from repro.runtime.straggler import FleetProfiler, sync_plan
+
+
+def _step_fn(state, batch):
+    return ({"x": state["x"] + batch["v"]},
+            {"loss": jnp.sum(batch["v"])})
+
+
+def _batches():
+    while True:
+        yield {"v": jnp.asarray(1.0)}
+
+
+def test_guarded_runner_completes(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    r = GuardedRunner(_step_fn, ckpt, ckpt_every=5)
+    state, end = r.run({"x": jnp.asarray(0.0)}, _batches(), 12)
+    assert end == 12
+    assert float(state["x"]) == 12.0
+    assert ckpt.latest_step() == 12
+
+
+def test_injected_failures_recovered(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    r = GuardedRunner(_step_fn, ckpt, ckpt_every=3,
+                      inject_failure_rate=0.3, seed=1, max_retries=50)
+    state, end = r.run({"x": jnp.asarray(0.0)}, _batches(), 15)
+    assert end == 15
+    assert r.stats["failures"] > 0  # failures actually happened
+    assert float(state["x"]) >= 1.0  # training progressed
+
+
+def test_failure_restores_from_checkpoint(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    calls = itertools.count()
+
+    def flaky(state, batch):
+        n = next(calls)
+        if n == 7:
+            raise RuntimeError("node died")
+        return _step_fn(state, batch)
+
+    r = GuardedRunner(flaky, ckpt, ckpt_every=2, max_retries=3)
+    state, end = r.run({"x": jnp.asarray(0.0)}, _batches(), 10)
+    assert end == 10
+    assert r.stats["failures"] == 1
+    assert r.stats["restores"] == 1
+
+
+def test_straggler_detection():
+    st = StragglerStats(threshold=2.0)
+    for _ in range(20):
+        st.observe(0.1)
+    assert st.observe(0.5) is True
+    assert st.observe(0.1) is False
+
+
+def test_fleet_profiler_tier_map():
+    fp = FleetProfiler(8)
+    for w in range(8):
+        for _ in range(5):
+            fp.observe(w, 0.1 * (w + 1))
+    tm = fp.build_tier_map(4)
+    plan = sync_plan(tm)
+    assert len(plan["tiers"]) == 4
+    assert plan["relative_rates"][0] == 1.0         # fastest tier
+    assert plan["relative_rates"][-1] < 0.5          # slowest much slower
+
+
+# ---- elastic -----------------------------------------------------------
+
+def _pod_state(n_pods):
+    return {
+        "params": {"w": jnp.arange(float(n_pods))[:, None] *
+                   jnp.ones((n_pods, 3))},
+        "opt": {"m": jnp.zeros((n_pods, 3))},
+        "step": jnp.full((n_pods,), 5, jnp.int32),
+        "counts": jnp.asarray(np.arange(1, n_pods + 1), jnp.float32),
+    }
+
+
+def test_shrink_pods():
+    s = elastic.shrink_pods(_pod_state(4), keep=[0, 2])
+    assert s["params"]["w"].shape[0] == 2
+    np.testing.assert_allclose(np.asarray(s["counts"]), [1.0, 3.0])
+
+
+def test_grow_pods_bootstraps_from_global():
+    s0 = _pod_state(2)
+    s = elastic.grow_pods(s0, 1)
+    assert s["params"]["w"].shape[0] == 3
+    assert float(s["counts"][-1]) == 0.0  # newcomer has no updates yet
+    # newcomer params = Eq.3 mix of survivors
+    from repro.core import aggregation
+    w_expect = aggregation.global_model(s0["params"], s0["counts"])["w"]
+    np.testing.assert_allclose(np.asarray(s["params"]["w"][-1]),
+                               np.asarray(w_expect), rtol=1e-6)

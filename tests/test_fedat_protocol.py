@@ -1,0 +1,79 @@
+"""FedAT protocol tests: the simulation-level algorithm (Algorithm 1) and
+its reductions/ablations."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.baselines import BaselineConfig, run_fedavg, run_fedasync, \
+    run_tifl
+from repro.core.fedat import FedATConfig, fake_polyline, measure_ratio, \
+    run_fedat
+from repro.core.simulation import SimConfig, SimEnv
+
+
+@pytest.fixture(scope="module")
+def env():
+    return SimEnv(SimConfig(n_clients=15, n_tiers=3, samples_per_client=30,
+                            classes_per_client=2, image_hw=8,
+                            clients_per_round=4, local_epochs=2,
+                            n_unstable=2))
+
+
+def test_fedat_runs_and_improves(env):
+    m = run_fedat(env, FedATConfig(total_updates=30, eval_every=10))
+    assert len(m.acc) >= 2
+    assert m.acc[-1] > 0.15  # better than chance (10 classes)
+    assert m.bytes_up[-1] > 0 and m.bytes_down[-1] > 0
+
+
+def test_fedat_wallclock_beats_fedavg(env):
+    """Definition 3.1 criterion 1: convergence speed in simulated time."""
+    mf = run_fedat(env, FedATConfig(total_updates=30, eval_every=30))
+    ma = run_fedavg(env, BaselineConfig(total_updates=30, eval_every=30))
+    # same number of global updates, but FedAT never waits for stragglers
+    assert mf.times[-1] < ma.times[-1] / 2
+
+
+def test_compression_reduces_bytes(env):
+    m_c = run_fedat(env, FedATConfig(total_updates=12, eval_every=12,
+                                     precision=4))
+    m_u = run_fedat(env, FedATConfig(total_updates=12, eval_every=12,
+                                     precision=None))
+    assert m_c.bytes_up[-1] < 0.8 * m_u.bytes_up[-1]
+
+
+def test_fake_polyline_is_codec_round():
+    x = {"w": jnp.asarray([0.123456, -2.987654])}
+    y = fake_polyline(x, 4)
+    np.testing.assert_allclose(np.asarray(y["w"]), [0.1235, -2.9877],
+                               atol=1e-6)
+
+
+def test_measured_ratio_below_one():
+    params = {"w": jnp.asarray(
+        np.random.default_rng(0).normal(0, 0.05, 2048), jnp.float32)}
+    assert measure_ratio(params, 4) < 0.9
+    assert measure_ratio(params, None) == 1.0
+
+
+def test_baselines_run(env):
+    bc = BaselineConfig(total_updates=10, eval_every=10)
+    for fn in (run_fedavg, run_tifl, run_fedasync):
+        m = fn(env, bc)
+        assert len(m.acc) >= 1
+        assert np.isfinite(m.acc[-1])
+
+
+def test_weighted_beats_uniform_eventually(env):
+    """Fig. 6 ablation runs; both modes must be functional."""
+    mw = run_fedat(env, FedATConfig(total_updates=25, eval_every=25,
+                                    weighted=True))
+    mu = run_fedat(env, FedATConfig(total_updates=25, eval_every=25,
+                                    weighted=False))
+    assert np.isfinite(mw.acc[-1]) and np.isfinite(mu.acc[-1])
+
+
+def test_dropout_clients_leave(env):
+    alive_late = env.alive(1e9)
+    assert alive_late.sum() == env.sc.n_clients - env.sc.n_unstable

@@ -1,0 +1,118 @@
+"""Property tests on model-level invariants (hypothesis + direct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.models import lm
+
+
+def _params(cfg, seed=0):
+    return lm.init_params(cfg, jax.random.PRNGKey(seed), tp=1)
+
+
+def _logits_all(cfg, params, toks):
+    """Full-sequence per-position logits via the loss-path features."""
+    from repro.models import transformer, zamba2, rwkv6
+    from repro.models.common import rms_norm
+    if cfg.family in lm.TRANSFORMER_FAMILIES:
+        x, _, _ = transformer.forward_train(cfg, params, {"tokens": toks}, 1)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        return jnp.einsum("bsd,dv->bsv", x, head)
+    if cfg.family == "hybrid":
+        x = jnp.take(params["embed"], toks, axis=0)
+        x, _ = zamba2._run(cfg, params, x, 1, "train")
+        x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+        return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    state = rwkv6.init_state(cfg, toks.shape[0], 1, stacked=cfg.n_layers)
+    x, _ = lm._rwkv_forward(cfg, params, toks, state, 1, False)
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "rwkv6-3b", "zamba2-2.7b",
+                                  "h2o-danube-3-4b"])
+def test_causality(arch):
+    """Perturbing a future token must not change past logits."""
+    cfg = registry.get_smoke_config(arch)
+    params = _params(cfg)
+    key = jax.random.PRNGKey(3)
+    toks = jax.random.randint(key, (1, 48), 0, cfg.vocab_size)
+    toks2 = toks.at[0, 40].set((toks[0, 40] + 1) % cfg.vocab_size)
+    la = _logits_all(cfg, params, toks)
+    lb = _logits_all(cfg, params, toks2)
+    # positions strictly before the perturbation are bit-identical-ish
+    assert float(jnp.max(jnp.abs(la[:, :40] - lb[:, :40]))) < 1e-5
+    # and the perturbation is actually visible afterwards
+    assert float(jnp.max(jnp.abs(la[:, 40:] - lb[:, 40:]))) > 1e-5
+
+
+def test_encoder_is_not_causal():
+    cfg = registry.get_smoke_config("hubert-xlarge")
+    params = _params(cfg)
+    from repro.models import transformer
+    key = jax.random.PRNGKey(4)
+    frames = jax.random.normal(key, (1, 32, cfg.d_model))
+    batch = {"frames": frames}
+    x, _, _ = transformer.forward_train(cfg, params, batch, 1)
+    frames2 = frames.at[0, 30].add(1.0)
+    x2, _, _ = transformer.forward_train(cfg, params, {"frames": frames2}, 1)
+    # bidirectional: early positions DO see the late perturbation
+    assert float(jnp.max(jnp.abs(x[:, :30] - x2[:, :30]))) > 1e-6
+
+
+def test_swa_window_limits_receptive_field():
+    cfg = registry.get_smoke_config("h2o-danube-3-4b")  # window 64
+    # single layer so the receptive field == one window exactly
+    cfg = cfg.replace(n_layers=1)
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 128), 0,
+                              cfg.vocab_size)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab_size)
+    la = _logits_all(cfg, params, toks)
+    lb = _logits_all(cfg, params, toks2)
+    # position 100 is > window past token 0: unaffected in a 1-layer net
+    assert float(jnp.max(jnp.abs(la[:, 100:] - lb[:, 100:]))) < 1e-5
+    assert float(jnp.max(jnp.abs(la[:, 1:40] - lb[:, 1:40]))) > 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=5, deadline=None)
+def test_loss_deterministic(seed):
+    cfg = registry.get_smoke_config("minitron-8b")
+    params = _params(cfg, seed % 17)
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (2, 64), 0,
+                              cfg.vocab_size)
+    l1, _ = lm.loss_fn(cfg, params, {"tokens": toks}, 1)
+    l2, _ = lm.loss_fn(cfg, params, {"tokens": toks}, 1)
+    assert float(l1) == float(l2)
+
+
+def test_batch_order_invariance():
+    """Per-sequence logits are independent of batch companions."""
+    cfg = registry.get_smoke_config("qwen2-7b")
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 48), 0,
+                              cfg.vocab_size)
+    la = _logits_all(cfg, params, toks)
+    lb = _logits_all(cfg, params, toks[::-1])
+    np.testing.assert_allclose(np.asarray(la[0]), np.asarray(lb[1]),
+                               atol=1e-5)
+
+
+def test_rwkv_state_carries_context():
+    """Splitting a sequence across two prefills with carried state ==
+    one prefill of the whole sequence (the recurrent contract)."""
+    cfg = registry.get_smoke_config("rwkv6-3b")
+    params = _params(cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(7), (1, 64), 0,
+                              cfg.vocab_size)
+    s0 = lm.init_cache(cfg, 1, 64, 1, dtype=jnp.float32)
+    full_logits, _ = lm.serve_prefill(cfg, params, {"tokens": toks}, 1, s0)
+    s1 = lm.init_cache(cfg, 1, 64, 1, dtype=jnp.float32)
+    _, s1 = lm.serve_prefill(cfg, params, {"tokens": toks[:, :32]}, 1, s1)
+    part_logits, _ = lm.serve_prefill(cfg, params, {"tokens": toks[:, 32:]},
+                                      1, s1)
+    np.testing.assert_allclose(np.asarray(full_logits),
+                               np.asarray(part_logits), atol=2e-3)

@@ -1,0 +1,67 @@
+"""Optimizer substrate tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, sgd, cosine_schedule, global_norm
+
+
+def test_sgd_quadratic_converges():
+    opt = sgd(lr=0.1)
+    params = {"x": jnp.asarray(5.0)}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = {"x": 2 * params["x"]}  # f = x^2
+        params, state = opt.step(params, grads, state)
+    assert abs(float(params["x"])) < 1e-4
+
+
+def test_sgd_momentum_accelerates():
+    def run(momentum, steps=30):
+        opt = sgd(lr=0.02, momentum=momentum)
+        p = {"x": jnp.asarray(5.0)}
+        s = opt.init(p)
+        for _ in range(steps):
+            p, s = opt.step(p, {"x": 2 * p["x"]}, s)
+        return abs(float(p["x"]))
+    assert run(0.9) < run(0.0)
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = adamw(lr=1e-3)
+    p = {"x": jnp.asarray(1.0)}
+    s = opt.init(p)
+    p2, _ = opt.step(p, {"x": jnp.asarray(0.5)}, s)
+    # bias-corrected first Adam step ~= lr * sign(g)
+    assert np.isclose(float(p["x"] - p2["x"]), 1e-3, rtol=1e-3)
+
+
+def test_adamw_weight_decay():
+    opt = adamw(lr=1e-2, weight_decay=0.1)
+    p = {"x": jnp.asarray(10.0)}
+    s = opt.init(p)
+    p2, _ = opt.step(p, {"x": jnp.asarray(0.0)}, s)
+    assert float(p2["x"]) < 10.0  # decays with zero gradient
+
+
+def test_grad_clip():
+    opt = adamw(lr=1.0, grad_clip=1.0)
+    p = {"x": jnp.asarray(0.0), "y": jnp.asarray(0.0)}
+    s = opt.init(p)
+    _, s2 = opt.step(p, {"x": jnp.asarray(100.0), "y": jnp.asarray(0.0)}, s)
+    # clipped grad enters the moment: |m| <= (1-b1) * clip
+    assert float(jnp.abs(s2["m"]["x"])) <= 0.1 + 1e-6
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1.0, warmup=10, total=100)
+    vals = [float(fn(jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
+    assert vals[0] == 0.0
+    assert np.isclose(vals[2], 1.0, atol=0.02)
+    assert vals[3] < vals[2]
+    assert np.isclose(vals[4], 0.1, atol=0.02)  # min_frac floor
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.ones((4,)) * 2}
+    assert np.isclose(float(global_norm(t)), np.sqrt(3 + 16))

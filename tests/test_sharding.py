@@ -1,0 +1,81 @@
+"""Logical-axis sharding rules + HLO collective parser."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import sharding as shd
+from repro.runtime.hlo import collective_bytes, count_collectives
+
+
+def _mesh2():
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def test_rules_resolution():
+    mesh = _mesh2()
+    with shd.use_mesh(mesh):
+        s = shd.logical_sharding(("batch", None, "tp"))
+        # "pod" absent from this mesh: batch -> data only
+        assert s.spec == P("data", None, "model")
+
+
+def test_missing_axis_dropped():
+    mesh = _mesh2()
+    with shd.use_mesh(mesh, {"batch": ("pod", "data")}):
+        s = shd.logical_sharding(("batch",))
+        assert s.spec == P("data")
+
+
+def test_rule_override():
+    mesh = _mesh2()
+    with shd.use_mesh(mesh, {"batch": None}):
+        s = shd.logical_sharding(("batch", "tp"))
+        assert s.spec == P(None, "model")
+
+
+def test_duplicate_axis_suppressed():
+    mesh = _mesh2()
+    with shd.use_mesh(mesh, {"a": "data", "b": "data"}):
+        s = shd.logical_sharding(("a", "b"))
+        assert s.spec == P("data", None)  # an axis can be used once
+
+
+def test_no_mesh_noop():
+    with shd.use_mesh(None):
+        x = jax.numpy.ones((4,))
+        assert shd.shard(x, "batch") is x
+
+
+def test_tp_size():
+    mesh = _mesh2()
+    with shd.use_mesh(mesh):
+        assert shd.tp_size() == 1
+    assert shd.tp_size() == 1  # no mesh -> 1
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = bf16[2,512,128]{2,1,0} all-gather(%p0), replica_groups=[32,16]<=[512], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%p1), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs = f32[64,32]{1,0} reduce-scatter(%p2), replica_groups=[4,4]<=[16], dimensions={0}
+  %cp = s8[100]{0} collective-permute(%p3), source_target_pairs={{0,1}}
+}
+"""
+
+
+def test_count_collectives():
+    c = count_collectives(HLO_SAMPLE)
+    assert c == {"all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+                 "collective-permute": 1}
+
+
+def test_collective_bytes_estimate():
+    b = collective_bytes(HLO_SAMPLE)
+    ag = (16 - 1) / 16 * 2 * 512 * 128 * 2
+    ar = 2 * 3 / 4 * 1024 * 4
+    rs = 3 / 4 * 64 * 32 * 4
+    cp = 100
+    assert abs(b - (ag + ar + rs + cp)) / b < 0.01

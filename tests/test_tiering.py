@@ -1,0 +1,51 @@
+"""Tiering module tests (client partitioning by response latency)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiering
+
+
+def test_equal_partition():
+    lat = np.arange(100)[::-1].astype(float)
+    tm = tiering.assign_tiers(lat, 5)
+    assert tm.n_tiers == 5
+    assert all(len(m) == 20 for m in tm.members)
+
+
+def test_monotone_in_latency():
+    rng = np.random.default_rng(0)
+    lat = rng.uniform(1, 30, 100)
+    tm = tiering.assign_tiers(lat, 5)
+    means = [lat[m].mean() for m in tm.members]
+    assert all(a < b for a, b in zip(means, means[1:]))
+    # every member of tier t is no slower than every member of tier t+1
+    for t in range(4):
+        assert lat[tm.members[t]].max() <= lat[tm.members[t + 1]].min() + 1e-9
+
+
+@given(st.lists(st.floats(0.1, 100, allow_nan=False), min_size=10,
+                max_size=60), st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_property_partition(lats, n_tiers):
+    tm = tiering.assign_tiers(lats, n_tiers)
+    all_ids = np.concatenate(tm.members)
+    assert sorted(all_ids.tolist()) == list(range(len(lats)))
+    assert (max(len(m) for m in tm.members) -
+            min(len(m) for m in tm.members)) <= 1
+
+
+def test_profile_bands():
+    rng = np.random.default_rng(1)
+    lat = tiering.profile_latencies(
+        np.ones(100), ((0, 0), (0, 5), (6, 10), (11, 15), (20, 30)), rng)
+    assert lat.min() >= 1.0 and lat.max() <= 31.0
+    assert (lat > 20).sum() >= 15  # slowest band populated
+
+
+def test_retier_preserves_count():
+    tm = tiering.assign_tiers(np.arange(10.0), 2)
+    tm2 = tiering.retier(tm, np.arange(10.0)[::-1].copy())
+    assert tm2.n_tiers == 2
+    # order flipped: old-fastest clients are now slowest
+    assert set(tm2.members[1]) == set(tm.members[0])
