@@ -144,12 +144,34 @@ def codec():
         r = measure_ratio(w, prec)
         us = (time.perf_counter() - t0) * 1e6
         emit(f"codec/polyline_p{prec}", us, f"ratio_vs_f32={1/r:.2f}x")
-    from repro.compress import quantize
+    from repro.compress import polyline, quantize
+    # vectorized vs scalar-reference polyline encoder
+    t0 = time.perf_counter()
+    polyline.encode_values(w["w"], 4)
+    us_vec = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    polyline.encode_values_ref(w["w"], 4)
+    us_ref = (time.perf_counter() - t0) * 1e6
+    emit("codec/polyline_encode_100k", us_vec,
+         f"speedup_vs_ref={us_ref / us_vec:.1f}x")
     x = jnp.asarray(w["w"])
     for bits in (8, 16):
         c = quantize.compress(x, bits)
         ratio = x.size * 4 / quantize.wire_bytes(c)
         emit(f"codec/quantize_int{bits}", 0.0, f"ratio_vs_f32={ratio:.2f}x")
+
+
+def codec_e2e():
+    """FedAT end-to-end per transport codec (engine + strategy + codec)."""
+    env = _env(2, seed=5)
+    for spec in ("none", "polyline:4", "quantize8", "quantize16"):
+        t0 = time.perf_counter()
+        m = run_fedat(env, FedATConfig(codec=spec, **_BBUDGET))
+        us = (time.perf_counter() - t0) * 1e6
+        total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
+        emit(f"codec_e2e/fedat_{spec.replace(':', '_')}",
+             us / _BBUDGET["total_updates"],
+             f"acc={m.best_acc:.3f};total_mb={total_mb:.1f}")
 
 
 def kernels():
@@ -216,6 +238,7 @@ ALL = {
     "fig6": fig6_weighted_aggregation,
     "fig7": fig7_participation,
     "codec": codec,
+    "codec_e2e": codec_e2e,
     "kernels": kernels,
     "trainer": trainer,
 }

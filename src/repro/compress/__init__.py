@@ -1,1 +1,2 @@
-from repro.compress import polyline, quantize  # noqa: F401
+from repro.compress import polyline, quantize, transport  # noqa: F401
+from repro.compress.transport import Codec, get_codec  # noqa: F401

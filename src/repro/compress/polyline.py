@@ -10,6 +10,12 @@ This is the paper's reference compressor: lossy with max error
 text/wire encodings.  The TPU-native equivalent used inside collectives is
 in :mod:`repro.compress.quantize` (see DESIGN.md §Hardware-adaptation).
 
+``encode_values``/``decode_values`` are numpy-vectorized over the whole
+value stream (the scalar reference implementations are kept as
+``encode_values_ref``/``decode_values_ref`` and cross-checked in tests);
+both require the zig-zagged deltas to fit in int64, which holds for any
+weight stream with ``|delta| * 10**precision < 2**62``.
+
 Marshalling: a pytree is flattened leaf-by-leaf; each leaf's shape travels
 with its encoded payload so the receiver can unmarshal (paper steps 1-3).
 """
@@ -22,7 +28,59 @@ import numpy as np
 
 
 def encode_values(values: np.ndarray, precision: int = 4) -> str:
-    """Polyline-encode a 1-D float array."""
+    """Polyline-encode a 1-D float array (vectorized)."""
+    factor = 10 ** precision
+    ints = np.round(np.asarray(values, np.float64) * factor).astype(np.int64)
+    if ints.size == 0:
+        return ""
+    deltas = np.diff(ints, prepend=np.int64(0))
+    v = (deltas << 1) ^ (deltas >> 63)              # zig-zag, branchless
+
+    # chunks emitted per value = #significant 5-bit groups (at least 1:
+    # a zero delta still emits one chunk); cap the matrix width at the
+    # stream's actual maximum instead of the int64 worst case of 13
+    width = max(1, -(-int(v.max()).bit_length() // 5))
+    chunks = np.empty((len(v), width), np.uint8)
+    valid = np.empty((len(v), width), bool)          # chunk j emitted?
+    valid[:, 0] = True
+    for j in range(width):
+        chunks[:, j] = (v >> (5 * j)) & 0x1F
+        if j:  # value needs chunk j iff it has significant bits >= 5j
+            np.greater_equal(v, np.int64(1) << (5 * j), out=valid[:, j])
+    cont = np.zeros_like(valid)                      # continuation bit
+    cont[:, :-1] = valid[:, 1:]
+    sym = (chunks | (cont.view(np.uint8) << 5)) + 63
+    # boolean indexing flattens row-major: per-value chunk order, then
+    # value order — exactly the scalar emission order
+    return sym[valid].tobytes().decode("ascii")
+
+
+def decode_values(encoded: str, precision: int = 4) -> np.ndarray:
+    """Inverse of :func:`encode_values` (vectorized)."""
+    factor = 10 ** precision
+    if not encoded:
+        return np.zeros(0, np.float32)
+    b = np.frombuffer(encoded.encode("ascii"), np.uint8).astype(np.int64) - 63
+    ends = (b & 0x20) == 0                     # last chunk of each value
+    # value index of each chunk, and its 5-bit position within the value
+    gid = np.concatenate([[0], np.cumsum(ends[:-1])])
+    starts = np.concatenate([[0], np.nonzero(ends)[0][:-1] + 1])
+    pos = np.arange(len(b)) - starts[gid]
+
+    res = np.zeros(int(ends.sum()), np.uint64)
+    np.add.at(res, gid,
+              (b & 0x1F).astype(np.uint64) << (pos.astype(np.uint64)
+                                               * np.uint64(5)))
+    res = res.astype(np.int64)
+    delta = np.where(res & 1, ~(res >> 1), res >> 1)
+    return (np.cumsum(delta) / factor).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# scalar reference implementations (spec + equivalence oracle in tests)
+# ---------------------------------------------------------------------------
+
+def encode_values_ref(values: np.ndarray, precision: int = 4) -> str:
     factor = 10 ** precision
     ints = np.round(np.asarray(values, np.float64) * factor).astype(np.int64)
     deltas = np.diff(ints, prepend=np.int64(0))
@@ -38,7 +96,7 @@ def encode_values(values: np.ndarray, precision: int = 4) -> str:
     return "".join(out)
 
 
-def decode_values(encoded: str, precision: int = 4) -> np.ndarray:
+def decode_values_ref(encoded: str, precision: int = 4) -> np.ndarray:
     factor = 10 ** precision
     vals: List[float] = []
     acc = 0

@@ -1,9 +1,12 @@
 """FedAT core: tiering, cross-tier weighted aggregation, async scheduler,
-the FedAT training protocol, and the paper's baselines (FedAvg/TiFL/
-FedAsync).  The datacenter-scale integration (pods-as-tiers) lives in
-core/steps.py + runtime/."""
+the unified event-driven engine (engine.py) with pluggable server
+strategies (strategies/) covering the FedAT protocol and the paper's
+baselines (FedAvg/TiFL/FedAsync).  The datacenter-scale integration
+(pods-as-tiers) lives in core/steps.py + runtime/."""
 from repro.core.aggregation import (  # noqa: F401
     cross_tier_weights, global_model, intra_tier_average, uniform_weights,
     weighted_average)
+from repro.core.engine import (  # noqa: F401
+    EngineConfig, Outcome, ServerStrategy, run_engine, run_strategy)
 from repro.core.tiering import TierMap, assign_tiers  # noqa: F401
 from repro.core import theory  # noqa: F401  (Theorems 5.1/5.2, executable)

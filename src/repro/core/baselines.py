@@ -10,21 +10,19 @@
                (Xie et al. 2019).
 
 All three share SimEnv (identical data, latencies, dropout schedule) and
-run uncompressed f32 links, as in the paper's Table 2.
+run uncompressed f32 links, as in the paper's Table 2.  Each is a strategy
+over the shared event loop (core/engine.py + core/strategies/); these
+wrappers keep the stable ``run_*(env, BaselineConfig)`` surface.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import aggregation
-from repro.core.scheduler import EventQueue, Metrics
+from repro.core.engine import EngineConfig, Metrics, run_engine
 from repro.core.simulation import SimEnv
-from repro.core.tiering import sample_round_latency
+from repro.core.strategies.fedasync import FedAsyncStrategy
+from repro.core.strategies.fedavg import FedAvgStrategy
+from repro.core.strategies.tifl import TiFLStrategy
 
 
 @dataclasses.dataclass
@@ -37,97 +35,20 @@ class BaselineConfig:
     staleness_exp: float = 0.5
 
 
-def run_fedavg(env: SimEnv, bc: BaselineConfig) -> Metrics:
-    sc = env.sc
-    rng = np.random.default_rng(bc.seed + 29)
-    w = env.params0
-    q = EventQueue()
-    metrics = Metrics()
-    bytes_up = bytes_down = 0.0
+def _engine_cfg(bc: BaselineConfig) -> EngineConfig:
+    return EngineConfig(total_updates=bc.total_updates,
+                        eval_every=bc.eval_every, seed=bc.seed)
 
-    for t in range(1, bc.total_updates + 1):
-        alive = env.alive(q.now)
-        pool = np.arange(sc.n_clients)[alive]
-        ids = env.sample_clients(pool, sc.clients_per_round, rng)
-        if len(ids) == 0:
-            break
-        # synchronous round: the server waits for the slowest client
-        q.push(sample_round_latency(env.tm, -1, ids, rng), None)
-        q.pop()
-        bytes_down += len(ids) * env.model_bytes
-        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)),
-                                len(ids))
-        client_params, _ = env.update_fn_noprox(w, env.client_batch(ids), rngs)
-        bytes_up += len(ids) * env.model_bytes
-        w = aggregation.intra_tier_average(client_params, env.n_samples(ids))
-        if t % bc.eval_every == 0 or t == bc.total_updates:
-            acc, var = env.evaluate(w)
-            metrics.record(q.now, t, acc, var, bytes_up, bytes_down)
-    return metrics
+
+def run_fedavg(env: SimEnv, bc: BaselineConfig) -> Metrics:
+    return run_engine(env, FedAvgStrategy(), _engine_cfg(bc))
 
 
 def run_tifl(env: SimEnv, bc: BaselineConfig) -> Metrics:
-    sc = env.sc
-    rng = np.random.default_rng(bc.seed + 31)
-    w = env.params0
-    q = EventQueue()
-    metrics = Metrics()
-    bytes_up = bytes_down = 0.0
-
-    for t in range(1, bc.total_updates + 1):
-        m = int(rng.integers(env.tm.n_tiers))
-        alive = env.alive(q.now)
-        pool = env.tm.members[m][alive[env.tm.members[m]]]
-        ids = env.sample_clients(pool, sc.clients_per_round, rng)
-        if len(ids) == 0:
-            continue
-        q.push(sample_round_latency(env.tm, m, ids, rng), None)
-        q.pop()
-        bytes_down += len(ids) * env.model_bytes
-        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)),
-                                len(ids))
-        client_params, _ = env.update_fn_noprox(w, env.client_batch(ids), rngs)
-        bytes_up += len(ids) * env.model_bytes
-        w = aggregation.intra_tier_average(client_params, env.n_samples(ids))
-        if t % bc.eval_every == 0 or t == bc.total_updates:
-            acc, var = env.evaluate(w)
-            metrics.record(q.now, t, acc, var, bytes_up, bytes_down)
-    return metrics
+    return run_engine(env, TiFLStrategy(), _engine_cfg(bc))
 
 
 def run_fedasync(env: SimEnv, bc: BaselineConfig) -> Metrics:
-    sc = env.sc
-    rng = np.random.default_rng(bc.seed + 37)
-    w = env.params0
-    q = EventQueue()
-    metrics = Metrics()
-    bytes_up = bytes_down = 0.0
-    server_version = 0
-
-    # every alive client trains continuously at its own pace
-    for c in range(sc.n_clients):
-        q.push(float(env.tm.latencies[c]), (int(c), server_version))
-
-    t = 0
-    while t < bc.total_updates and len(q):
-        now, (c, start_version) = q.pop()
-        if not env.alive(now)[c]:
-            continue
-        bytes_down += env.model_bytes
-        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)), 1)
-        ids = np.asarray([c])
-        client_params, _ = env.update_fn_noprox(w, env.client_batch(ids), rngs)
-        client_w = jax.tree.map(lambda a: a[0], client_params)
-        bytes_up += env.model_bytes
-        # polynomial staleness weighting (FedAsync)
-        staleness = server_version - start_version
-        a_eff = bc.alpha * (1.0 + staleness) ** (-bc.staleness_exp)
-        w = jax.tree.map(lambda g, l: (1 - a_eff) * g + a_eff * l, w, client_w)
-        server_version += 1
-        t += 1
-        q.push(float(env.tm.latencies[c]) * (1 + rng.uniform(0, 0.1)),
-               (c, server_version))
-        if t % bc.eval_every == 0 or t == bc.total_updates:
-            acc, var = env.evaluate(w)
-            metrics.record(now, t, acc, var, bytes_up, bytes_down)
-    return metrics
+    return run_engine(env, FedAsyncStrategy(alpha=bc.alpha,
+                                            staleness_exp=bc.staleness_exp),
+                      _engine_cfg(bc))

@@ -1,0 +1,151 @@
+"""Unified event-driven FL engine (the single loop behind every method).
+
+The paper's protocol family — synchronous intra-tier rounds composed with
+asynchronous cross-tier updates over (optionally) compressed links — and all
+of its baselines are instances of one discrete-event loop:
+
+    pop event -> (dropout filter / sampling) -> downlink -> local train
+    -> uplink -> aggregate -> reschedule -> periodic eval,
+
+with byte accounting along the two links.  What differs between FedAT,
+FedAvg, TiFL and FedAsync is *server policy*: what an event means, how the
+server state is aggregated, and what gets rescheduled.  Those differences
+live behind the :class:`ServerStrategy` interface (FLGo's
+``BasicServer.iterate()`` hook pattern, adapted to an event queue); the loop
+itself lives in :func:`run_engine` and exists exactly once.
+
+RNG discipline: a strategy declares ``seed_offset`` and draws exclusively
+from ``ctx.rng`` in event order, so a (strategy, SimEnv, EngineConfig, seed)
+tuple fully determines the :class:`~repro.core.scheduler.Metrics`
+trajectory.  The offsets match the deleted per-method loops, keeping every
+trajectory reproducible against the seed implementations
+(tests/test_engine_parity.py).
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+import enum
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.core.scheduler import EventQueue, Metrics
+from repro.core.simulation import SimEnv
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    """Knobs shared by every method; strategy-specific knobs live on the
+    strategy object (see core/strategies/)."""
+    total_updates: int = 200   # T: global update budget
+    eval_every: int = 10
+    seed: int = 0
+
+
+class Outcome(enum.Enum):
+    """What a handled event did to the global round counter ``t``.
+
+    STEP        committed one global update: t += 1, eval cadence applies.
+    SKIP_ROUND  consumed a round of budget without an update (e.g. TiFL
+                drawing a tier whose members all dropped out): t += 1 but
+                no eval — mirrors the seed loops' ``continue`` after the
+                round counter advanced.
+    DISCARD     the event produced nothing (dead FedAsync client, FedAT
+                tier resample): t unchanged.
+    """
+    STEP = "step"
+    SKIP_ROUND = "skip_round"
+    DISCARD = "discard"
+
+
+@dataclasses.dataclass
+class EngineContext:
+    """Mutable per-run state handed to every strategy hook."""
+    q: EventQueue
+    rng: np.random.Generator
+    metrics: Metrics
+    cfg: EngineConfig
+    bytes_up: float = 0.0
+    bytes_down: float = 0.0
+    t_global: int = 0
+
+    def local_train(self, env: SimEnv, w: Any, ids: np.ndarray,
+                    use_prox: bool = False) -> Any:
+        """Shared local-training leg: one jitted vmapped update over the
+        selected clients.  Consumes exactly one ``rng.integers`` draw."""
+        rngs = jax.random.split(
+            jax.random.PRNGKey(self.rng.integers(2 ** 31)), len(ids))
+        fn = env.update_fn if use_prox else env.update_fn_noprox
+        client_params, _ = fn(w, env.client_batch(ids), rngs)
+        return client_params
+
+
+class ServerStrategy(abc.ABC):
+    """Server policy plugged into :func:`run_engine`.
+
+    Lifecycle: ``bind`` (allocate server state from the env) ->
+    ``bootstrap`` (push initial events) -> ``on_event`` per popped event ->
+    ``on_eval`` after each periodic evaluation.
+    """
+
+    name: str = "strategy"
+    #: added to EngineConfig.seed for this strategy's rng stream; the values
+    #: in core/strategies/ reproduce the seed implementations bit-for-bit.
+    seed_offset: int = 0
+
+    def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
+        """Allocate server-side state (models, counters) for a fresh run."""
+
+    @abc.abstractmethod
+    def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
+        """Push the initial event(s) onto ``ctx.q``."""
+
+    @abc.abstractmethod
+    def on_event(self, env: SimEnv, ctx: EngineContext, now: float,
+                 actor: Any) -> Outcome:
+        """Handle one completion event; return what it did to ``t``."""
+
+    @abc.abstractmethod
+    def global_params(self) -> Any:
+        """The model the server would deploy right now (eval target)."""
+
+    def on_eval(self, env: SimEnv, ctx: EngineContext) -> None:
+        """Hook after each periodic eval (e.g. re-measure the wire ratio)."""
+
+
+def run_engine(env: SimEnv, strategy: ServerStrategy,
+               cfg: EngineConfig) -> Metrics:
+    """The one event loop.  Timestamp-ordered server reactions (Figure 1's
+    timeline), a global update budget, and the shared eval cadence."""
+    ctx = EngineContext(
+        q=EventQueue(),
+        rng=np.random.default_rng(cfg.seed + strategy.seed_offset),
+        metrics=Metrics(), cfg=cfg)
+    strategy.bind(env, cfg)
+    strategy.bootstrap(env, ctx)
+
+    while ctx.t_global < cfg.total_updates and len(ctx.q):
+        now, actor = ctx.q.pop()
+        out = strategy.on_event(env, ctx, now, actor)
+        if out is Outcome.DISCARD:
+            continue
+        ctx.t_global += 1
+        if out is Outcome.SKIP_ROUND:
+            continue
+        if (ctx.t_global % cfg.eval_every == 0
+                or ctx.t_global == cfg.total_updates):
+            acc, var = env.evaluate(strategy.global_params())
+            strategy.on_eval(env, ctx)
+            ctx.metrics.record(now, ctx.t_global, acc, var,
+                               ctx.bytes_up, ctx.bytes_down)
+    return ctx.metrics
+
+
+def run_strategy(env: SimEnv, name: str, cfg: EngineConfig = None,
+                 **strategy_kwargs) -> Metrics:
+    """Convenience: look up a registered strategy by name and run it."""
+    from repro.core import strategies
+    return run_engine(env, strategies.make_strategy(name, **strategy_kwargs),
+                      cfg or EngineConfig())

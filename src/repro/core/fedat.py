@@ -1,34 +1,21 @@
-"""FedAT: intra-tier synchronous + cross-tier asynchronous training
-(Algorithm 1), with weighted aggregation (Eq. 3), proximal local objective
-(Eq. 5) and lossy uplink/downlink compression (§4.3).
+"""FedAT entry point (Algorithm 1): intra-tier synchronous + cross-tier
+asynchronous training with weighted aggregation (Eq. 3), proximal local
+objective (Eq. 5) and lossy uplink/downlink compression (§4.3).
 
-The server keeps one model per tier plus the per-tier update counts; every
-tier-completion event triggers
-
-  1. decompress client payloads (deCom in Figure 1),
-  2. intra-tier weighted average (Eq. 4)  -> w_{tier_m},
-  3. T_{tier_m} += 1 ; t += 1,
-  4. global w = sum_m  T_{tier_(M+1-m)} / T * w_{tier_m}   (Eq. 3),
-  5. compress + send w to the next ready tier.
-
-Compression on the learning dynamics is modeled in-graph by the exact lossy
-step of the polyline codec (round to 10^-p); wire bytes are accounted with
-the measured polyline payload ratio (see compress/polyline.py).
+The event loop lives in :mod:`repro.core.engine`; the FedAT policy lives in
+:mod:`repro.core.strategies.fedat`.  This module keeps the stable
+``run_fedat(env, FedATConfig)`` surface plus the codec helpers the tests
+and benchmarks use.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.compress import polyline
-from repro.core import aggregation
-from repro.core.scheduler import EventQueue, Metrics
+from repro.compress import transport
+from repro.core.engine import EngineConfig, Metrics, run_engine
 from repro.core.simulation import SimEnv
-from repro.core.tiering import sample_round_latency
+from repro.core.strategies.fedat import FedATStrategy
 
 
 @dataclasses.dataclass
@@ -39,96 +26,29 @@ class FedATConfig:
     use_prox: bool = True          # Eq. 5 constraint on/off
     eval_every: int = 10
     seed: int = 0
+    #: transport codec override ("polyline:<p>", "quantize8", "quantize16",
+    #: "none"); None derives it from ``precision``
+    codec: Optional[str] = None
 
 
 def fake_polyline(params, precision: Optional[int]):
     """The codec's exact lossy step: round to `precision` decimals."""
     if precision is None:
         return params
-    f = 10.0 ** precision
-    return jax.tree.map(lambda x: jnp.round(x * f) / f, params)
+    return transport.PolylineCodec(precision).lossy(params)
 
 
 def measure_ratio(params, precision: Optional[int]) -> float:
-    """Wire bytes / raw f32 bytes for the polyline codec."""
+    """Wire bytes / raw f32 bytes for the polyline codec (full model)."""
     if precision is None:
         return 1.0
-    msg = polyline.marshal(params, precision)
-    return polyline.payload_bytes(msg) / polyline.raw_bytes(params)
+    return transport.PolylineCodec(precision).measure_ratio(params,
+                                                            max_elems=None)
 
 
 def run_fedat(env: SimEnv, fc: FedATConfig) -> Metrics:
-    sc = env.sc
-    M = env.tm.n_tiers
-    rng = np.random.default_rng(fc.seed + 17)
-
-    tier_models = jax.tree.map(
-        lambda l: jnp.stack([l] * M), env.params0)        # (M, ...)
-    counts = np.zeros(M, np.int64)
-    w_global = env.params0
-    update_fn = env.update_fn if fc.use_prox else env.update_fn_noprox
-
-    # measured compression ratio (re-measured at every eval point)
-    ratio = measure_ratio(env.params0, fc.precision)
-
-    q = EventQueue()
-    metrics = Metrics()
-    bytes_up = bytes_down = 0.0
-    t_global = 0
-
-    # bootstrap: every tier starts round 0 at its own pace
-    for m in range(M):
-        ids = env.sample_clients(env.tm.members[m], sc.clients_per_round, rng)
-        q.push(sample_round_latency(env.tm, m, ids, rng), (m, ids))
-
-    while t_global < fc.total_updates and len(q):
-        now, (m, ids) = q.pop()
-        alive = env.alive(now)
-        ids = ids[alive[ids]]
-        if len(ids) == 0:  # whole sample dropped: reschedule the tier
-            ids = env.sample_clients(env.tm.members[m][alive[env.tm.members[m]]],
-                                     sc.clients_per_round, rng)
-            if len(ids) == 0:
-                continue
-            q.push(sample_round_latency(env.tm, m, ids, rng), (m, ids))
-            continue
-
-        # downlink: server -> selected clients (compressed global model)
-        w_sent = fake_polyline(w_global, fc.precision)
-        bytes_down += len(ids) * env.model_bytes * ratio
-
-        # local training (vmapped over the tier's selected clients)
-        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)),
-                                len(ids))
-        client_params, _ = update_fn(w_sent, env.client_batch(ids), rngs)
-
-        # uplink: clients -> server (compressed), then deCom + Eq. 4
-        client_params = fake_polyline(client_params, fc.precision)
-        bytes_up += len(ids) * env.model_bytes * ratio
-        tier_model = aggregation.intra_tier_average(client_params,
-                                                    env.n_samples(ids))
-        tier_models = jax.tree.map(
-            lambda s, nw: s.at[m].set(nw), tier_models, tier_model)
-        counts[m] += 1
-        t_global += 1
-
-        # Eq. 3 cross-tier weighted aggregation
-        if fc.weighted:
-            w_global = aggregation.global_model(tier_models,
-                                                jnp.asarray(counts))
-        else:
-            w_global = aggregation.weighted_average(
-                tier_models, aggregation.uniform_weights(M))
-
-        # next round for this tier
-        nxt = env.sample_clients(
-            env.tm.members[m][alive[env.tm.members[m]]],
-            sc.clients_per_round, rng)
-        if len(nxt):
-            q.push(sample_round_latency(env.tm, m, nxt, rng), (m, nxt))
-
-        if t_global % fc.eval_every == 0 or t_global == fc.total_updates:
-            acc, var = env.evaluate(w_global)
-            ratio = measure_ratio(w_global, fc.precision)
-            metrics.record(now, t_global, acc, var, bytes_up, bytes_down)
-    return metrics
+    strategy = FedATStrategy(precision=fc.precision, codec=fc.codec,
+                             weighted=fc.weighted, use_prox=fc.use_prox)
+    return run_engine(env, strategy,
+                      EngineConfig(total_updates=fc.total_updates,
+                                   eval_every=fc.eval_every, seed=fc.seed))

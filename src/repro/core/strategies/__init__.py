@@ -1,0 +1,26 @@
+"""Pluggable server strategies for the event-driven engine (core/engine.py).
+
+Each strategy reimplements one of the paper's methods as policy hooks over
+the shared loop; the rng draw order inside each hook reproduces the deleted
+per-method loops exactly (tests/test_engine_parity.py)."""
+from typing import Callable, Dict
+
+from repro.core.engine import ServerStrategy
+from repro.core.strategies.fedat import FedATStrategy  # noqa: F401
+from repro.core.strategies.fedavg import FedAvgStrategy  # noqa: F401
+from repro.core.strategies.fedasync import FedAsyncStrategy  # noqa: F401
+from repro.core.strategies.tifl import TiFLStrategy  # noqa: F401
+
+STRATEGIES: Dict[str, Callable[..., ServerStrategy]] = {
+    "fedat": FedATStrategy,
+    "fedavg": FedAvgStrategy,
+    "tifl": TiFLStrategy,
+    "fedasync": FedAsyncStrategy,
+}
+
+
+def make_strategy(name: str, **kwargs) -> ServerStrategy:
+    if name not in STRATEGIES:
+        raise ValueError(f"unknown strategy {name!r}; "
+                         f"registered: {sorted(STRATEGIES)}")
+    return STRATEGIES[name](**kwargs)

@@ -1,0 +1,56 @@
+"""FedAsync as an engine strategy: fully asynchronous — every client
+updates the server model independently with polynomial staleness weighting
+(Xie et al. 2019).
+
+Event = (client id, server version at dispatch).  A dead client's event is
+discarded without rescheduling (its dropout is permanent).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.core.engine import (EngineConfig, EngineContext, Outcome,
+                               ServerStrategy)
+from repro.core.simulation import SimEnv
+
+
+class FedAsyncStrategy(ServerStrategy):
+    name = "fedasync"
+    seed_offset = 37
+
+    def __init__(self, alpha: float = 0.6, staleness_exp: float = 0.5):
+        self.alpha = alpha
+        self.staleness_exp = staleness_exp
+
+    def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
+        self.w = env.params0
+        self.server_version = 0
+
+    def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
+        # every client trains continuously at its own pace
+        for c in range(env.sc.n_clients):
+            ctx.q.push(float(env.tm.latencies[c]), (int(c), 0))
+
+    def on_event(self, env: SimEnv, ctx: EngineContext, now: float,
+                 actor) -> Outcome:
+        c, start_version = actor
+        if not env.alive(now)[c]:
+            return Outcome.DISCARD
+        ctx.bytes_down += env.model_bytes
+        ids = np.asarray([c])
+        client_params = ctx.local_train(env, self.w, ids, use_prox=False)
+        client_w = jax.tree.map(lambda a: a[0], client_params)
+        ctx.bytes_up += env.model_bytes
+        # polynomial staleness weighting (FedAsync)
+        staleness = self.server_version - start_version
+        a_eff = self.alpha * (1.0 + staleness) ** (-self.staleness_exp)
+        self.w = jax.tree.map(lambda g, l: (1 - a_eff) * g + a_eff * l,
+                              self.w, client_w)
+        self.server_version += 1
+        ctx.q.push(float(env.tm.latencies[c]) * (1 + ctx.rng.uniform(0, 0.1)),
+                   (c, self.server_version))
+        return Outcome.STEP
+
+    def global_params(self):
+        return self.w

@@ -1,0 +1,123 @@
+"""FedAT as an engine strategy: intra-tier synchronous rounds + cross-tier
+asynchronous aggregation (Algorithm 1) over a codec-compressed link.
+
+Event = (tier m, sampled client ids).  Every tier-completion event triggers
+
+  1. decompress client payloads (deCom in Figure 1) — modeled in-graph by
+     the codec's exact lossy step,
+  2. intra-tier weighted average (Eq. 4)  -> w_{tier_m},
+  3. T_{tier_m} += 1 ; t += 1,
+  4. global w = sum_m  T_{tier_(M+1-m)} / T * w_{tier_m}   (Eq. 3),
+  5. compress + send w to the next ready tier.
+
+Wire bytes are accounted with the codec's measured payload ratio,
+re-measured at every eval point on a size-capped parameter sample (see
+compress/transport.py on the accounting approximation).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import transport
+from repro.core import aggregation
+from repro.core.engine import (EngineConfig, EngineContext, Outcome,
+                               ServerStrategy)
+from repro.core.simulation import SimEnv
+from repro.core.tiering import sample_round_latency
+
+
+class FedATStrategy(ServerStrategy):
+    name = "fedat"
+    seed_offset = 17
+
+    def __init__(self, precision: Optional[int] = 4,
+                 codec: Union[str, transport.Codec, None] = None,
+                 weighted: bool = True, use_prox: bool = True,
+                 ratio_sample_elems: Optional[int]
+                 = transport.RATIO_SAMPLE_ELEMS):
+        """``codec`` overrides the paper's default link; when None, it is
+        derived from ``precision`` (polyline:<p>, or identity links for
+        precision=None) to keep the seed configuration surface."""
+        if codec is None:
+            codec = "none" if precision is None else f"polyline:{precision}"
+        self.codec = transport.get_codec(codec)
+        self.weighted = weighted
+        self.use_prox = use_prox
+        self.ratio_sample_elems = ratio_sample_elems
+
+    # ------------------------------------------------------------------
+    def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
+        M = env.tm.n_tiers
+        self.tier_models = jax.tree.map(
+            lambda l: jnp.stack([l] * M), env.params0)    # (M, ...)
+        self.counts = np.zeros(M, np.int64)
+        self.w_global = env.params0
+        self._ratio = self.codec.measure_ratio(env.params0,
+                                               self.ratio_sample_elems)
+
+    def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
+        # every tier starts round 0 at its own pace
+        for m in range(env.tm.n_tiers):
+            ids = env.sample_clients(env.tm.members[m],
+                                     env.sc.clients_per_round, ctx.rng)
+            ctx.q.push(sample_round_latency(env.tm, m, ids, ctx.rng),
+                       (m, ids))
+
+    def on_event(self, env: SimEnv, ctx: EngineContext, now: float,
+                 actor) -> Outcome:
+        m, ids = actor
+        alive = env.alive(now)
+        ids = ids[alive[ids]]
+        if len(ids) == 0:  # whole sample dropped: reschedule the tier
+            pool = env.tm.members[m][alive[env.tm.members[m]]]
+            ids = env.sample_clients(pool, env.sc.clients_per_round, ctx.rng)
+            if len(ids):
+                ctx.q.push(sample_round_latency(env.tm, m, ids, ctx.rng),
+                           (m, ids))
+            return Outcome.DISCARD
+
+        # downlink: server -> selected clients (compressed global model)
+        w_sent = self.codec.lossy(self.w_global)
+        ctx.bytes_down += len(ids) * env.model_bytes * self._ratio
+
+        # local training (vmapped over the tier's selected clients)
+        client_params = ctx.local_train(env, w_sent, ids,
+                                        use_prox=self.use_prox)
+
+        # uplink: clients -> server (compressed), then deCom + Eq. 4
+        client_params = self.codec.lossy(client_params)
+        ctx.bytes_up += len(ids) * env.model_bytes * self._ratio
+        tier_model = aggregation.intra_tier_average(client_params,
+                                                    env.n_samples(ids))
+        self.tier_models = jax.tree.map(
+            lambda s, nw: s.at[m].set(nw), self.tier_models, tier_model)
+        self.counts[m] += 1
+
+        # Eq. 3 cross-tier weighted aggregation
+        if self.weighted:
+            self.w_global = aggregation.global_model(
+                self.tier_models, jnp.asarray(self.counts))
+        else:
+            self.w_global = aggregation.weighted_average(
+                self.tier_models, aggregation.uniform_weights(len(self.counts)))
+
+        # next round for this tier
+        nxt = env.sample_clients(
+            env.tm.members[m][alive[env.tm.members[m]]],
+            env.sc.clients_per_round, ctx.rng)
+        if len(nxt):
+            ctx.q.push(sample_round_latency(env.tm, m, nxt, ctx.rng),
+                       (m, nxt))
+        return Outcome.STEP
+
+    def global_params(self):
+        return self.w_global
+
+    def on_eval(self, env: SimEnv, ctx: EngineContext) -> None:
+        # track the wire ratio as the weight distribution drifts (sampled)
+        self._ratio = self.codec.measure_ratio(self.w_global,
+                                               self.ratio_sample_elems)

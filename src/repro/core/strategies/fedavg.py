@@ -1,0 +1,61 @@
+"""FedAvg as an engine strategy: synchronous global rounds over raw f32
+links — sample K clients globally, wait for the slowest (paper §6.1).
+
+A round is scheduled while handling the previous round's completion event
+(sampling against liveness at that simulated instant, like the seed loop's
+round head), so the engine's queue always holds exactly one round event.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import aggregation
+from repro.core.engine import (EngineConfig, EngineContext, Outcome,
+                               ServerStrategy)
+from repro.core.simulation import SimEnv
+from repro.core.tiering import sample_round_latency
+
+
+class FedAvgStrategy(ServerStrategy):
+    name = "fedavg"
+    seed_offset = 29
+    #: an empty draw ends the run (no liveness left to wait for) — TiFL
+    #: overrides this to burn the round instead
+    reschedule_on_empty = False
+
+    def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
+        self.w = env.params0
+
+    def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
+        self._schedule(env, ctx)
+
+    def _sample(self, env, ctx):
+        """(tier index, client ids) for the next round; -1 = global pool."""
+        alive = env.alive(ctx.q.now)
+        pool = np.arange(env.sc.n_clients)[alive]
+        return -1, env.sample_clients(pool, env.sc.clients_per_round, ctx.rng)
+
+    def _schedule(self, env: SimEnv, ctx: EngineContext) -> None:
+        m, ids = self._sample(env, ctx)
+        if len(ids) == 0:
+            if self.reschedule_on_empty:  # zero-latency budget-burn marker
+                ctx.q.push(0.0, (m, ids))
+            return  # else: queue drains and the run ends (seed's ``break``)
+        ctx.q.push(sample_round_latency(env.tm, m, ids, ctx.rng), (m, ids))
+
+    def on_event(self, env: SimEnv, ctx: EngineContext, now: float,
+                 actor) -> Outcome:
+        m, ids = actor
+        if len(ids) == 0:
+            self._schedule(env, ctx)
+            return Outcome.SKIP_ROUND
+        ctx.bytes_down += len(ids) * env.model_bytes
+        client_params = ctx.local_train(env, self.w, ids, use_prox=False)
+        ctx.bytes_up += len(ids) * env.model_bytes
+        self.w = aggregation.intra_tier_average(client_params,
+                                               env.n_samples(ids))
+        self._schedule(env, ctx)
+        return Outcome.STEP
+
+    def global_params(self):
+        return self.w

@@ -55,10 +55,19 @@ def main(argv=None):
     ap.add_argument("--inject-failure-rate", type=float, default=0.0)
     ap.add_argument("--fedat-sync-every", type=int, default=4)
     ap.add_argument("--fedat-bits", type=int, default=8)
+    ap.add_argument("--codec", default=None,
+                    help="transport codec for the cross-tier link "
+                         "(quantize8/quantize16; overrides --fedat-bits)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     logging.basicConfig(level=logging.INFO)
+    if args.codec:
+        from repro.compress import transport
+        try:
+            args.fedat_bits = transport.cross_tier_bits(args.codec)
+        except ValueError as e:
+            ap.error(str(e))
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     shape = smoke_shape("train") if args.smoke else SHAPES[args.shape]
     tcfg = TrainConfig(

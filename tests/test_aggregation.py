@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis import given, settings, st  # property tests skip without hypothesis
 
 from repro.core import aggregation as agg
 

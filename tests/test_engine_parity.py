@@ -1,0 +1,246 @@
+"""Engine parity: each strategy run through core/engine.py reproduces the
+seed (pre-refactor) per-method event loops' Metrics trajectory, plus
+determinism (same seed -> identical metrics across two runs).
+
+The reference implementations below are verbatim-compact copies of the
+deleted loops from core/fedat.py and core/baselines.py at the seed commit;
+they are the oracle the unified engine must match.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation
+from repro.core.baselines import BaselineConfig, run_fedavg, run_fedasync, \
+    run_tifl
+from repro.core.fedat import FedATConfig, fake_polyline, measure_ratio, \
+    run_fedat
+from repro.core.scheduler import EventQueue, Metrics
+from repro.core.simulation import SimConfig, SimEnv
+from repro.core.tiering import sample_round_latency
+
+
+@pytest.fixture(scope="module")
+def env():
+    return SimEnv(SimConfig(n_clients=15, n_tiers=3, samples_per_client=30,
+                            classes_per_client=2, image_hw=8,
+                            clients_per_round=4, local_epochs=2,
+                            n_unstable=2))
+
+
+# ---------------------------------------------------------------------------
+# seed reference implementations (the oracle)
+# ---------------------------------------------------------------------------
+
+def _seed_fedat(env, fc):
+    sc = env.sc
+    M = env.tm.n_tiers
+    rng = np.random.default_rng(fc.seed + 17)
+    tier_models = jax.tree.map(lambda l: jnp.stack([l] * M), env.params0)
+    counts = np.zeros(M, np.int64)
+    w_global = env.params0
+    update_fn = env.update_fn if fc.use_prox else env.update_fn_noprox
+    ratio = measure_ratio(env.params0, fc.precision)
+    q = EventQueue()
+    metrics = Metrics()
+    bytes_up = bytes_down = 0.0
+    t_global = 0
+    for m in range(M):
+        ids = env.sample_clients(env.tm.members[m], sc.clients_per_round, rng)
+        q.push(sample_round_latency(env.tm, m, ids, rng), (m, ids))
+    while t_global < fc.total_updates and len(q):
+        now, (m, ids) = q.pop()
+        alive = env.alive(now)
+        ids = ids[alive[ids]]
+        if len(ids) == 0:
+            ids = env.sample_clients(
+                env.tm.members[m][alive[env.tm.members[m]]],
+                sc.clients_per_round, rng)
+            if len(ids) == 0:
+                continue
+            q.push(sample_round_latency(env.tm, m, ids, rng), (m, ids))
+            continue
+        w_sent = fake_polyline(w_global, fc.precision)
+        bytes_down += len(ids) * env.model_bytes * ratio
+        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)),
+                                len(ids))
+        client_params, _ = update_fn(w_sent, env.client_batch(ids), rngs)
+        client_params = fake_polyline(client_params, fc.precision)
+        bytes_up += len(ids) * env.model_bytes * ratio
+        tier_model = aggregation.intra_tier_average(client_params,
+                                                    env.n_samples(ids))
+        tier_models = jax.tree.map(
+            lambda s, nw: s.at[m].set(nw), tier_models, tier_model)
+        counts[m] += 1
+        t_global += 1
+        if fc.weighted:
+            w_global = aggregation.global_model(tier_models,
+                                                jnp.asarray(counts))
+        else:
+            w_global = aggregation.weighted_average(
+                tier_models, aggregation.uniform_weights(M))
+        nxt = env.sample_clients(
+            env.tm.members[m][alive[env.tm.members[m]]],
+            sc.clients_per_round, rng)
+        if len(nxt):
+            q.push(sample_round_latency(env.tm, m, nxt, rng), (m, nxt))
+        if t_global % fc.eval_every == 0 or t_global == fc.total_updates:
+            acc, var = env.evaluate(w_global)
+            ratio = measure_ratio(w_global, fc.precision)
+            metrics.record(now, t_global, acc, var, bytes_up, bytes_down)
+    return metrics
+
+
+def _seed_fedavg(env, bc):
+    sc = env.sc
+    rng = np.random.default_rng(bc.seed + 29)
+    w = env.params0
+    q = EventQueue()
+    metrics = Metrics()
+    bytes_up = bytes_down = 0.0
+    for t in range(1, bc.total_updates + 1):
+        alive = env.alive(q.now)
+        pool = np.arange(sc.n_clients)[alive]
+        ids = env.sample_clients(pool, sc.clients_per_round, rng)
+        if len(ids) == 0:
+            break
+        q.push(sample_round_latency(env.tm, -1, ids, rng), None)
+        q.pop()
+        bytes_down += len(ids) * env.model_bytes
+        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)),
+                                len(ids))
+        client_params, _ = env.update_fn_noprox(w, env.client_batch(ids), rngs)
+        bytes_up += len(ids) * env.model_bytes
+        w = aggregation.intra_tier_average(client_params, env.n_samples(ids))
+        if t % bc.eval_every == 0 or t == bc.total_updates:
+            acc, var = env.evaluate(w)
+            metrics.record(q.now, t, acc, var, bytes_up, bytes_down)
+    return metrics
+
+
+def _seed_tifl(env, bc):
+    sc = env.sc
+    rng = np.random.default_rng(bc.seed + 31)
+    w = env.params0
+    q = EventQueue()
+    metrics = Metrics()
+    bytes_up = bytes_down = 0.0
+    for t in range(1, bc.total_updates + 1):
+        m = int(rng.integers(env.tm.n_tiers))
+        alive = env.alive(q.now)
+        pool = env.tm.members[m][alive[env.tm.members[m]]]
+        ids = env.sample_clients(pool, sc.clients_per_round, rng)
+        if len(ids) == 0:
+            continue
+        q.push(sample_round_latency(env.tm, m, ids, rng), None)
+        q.pop()
+        bytes_down += len(ids) * env.model_bytes
+        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)),
+                                len(ids))
+        client_params, _ = env.update_fn_noprox(w, env.client_batch(ids), rngs)
+        bytes_up += len(ids) * env.model_bytes
+        w = aggregation.intra_tier_average(client_params, env.n_samples(ids))
+        if t % bc.eval_every == 0 or t == bc.total_updates:
+            acc, var = env.evaluate(w)
+            metrics.record(q.now, t, acc, var, bytes_up, bytes_down)
+    return metrics
+
+
+def _seed_fedasync(env, bc):
+    sc = env.sc
+    rng = np.random.default_rng(bc.seed + 37)
+    w = env.params0
+    q = EventQueue()
+    metrics = Metrics()
+    bytes_up = bytes_down = 0.0
+    server_version = 0
+    for c in range(sc.n_clients):
+        q.push(float(env.tm.latencies[c]), (int(c), server_version))
+    t = 0
+    while t < bc.total_updates and len(q):
+        now, (c, start_version) = q.pop()
+        if not env.alive(now)[c]:
+            continue
+        bytes_down += env.model_bytes
+        rngs = jax.random.split(jax.random.PRNGKey(rng.integers(2**31)), 1)
+        ids = np.asarray([c])
+        client_params, _ = env.update_fn_noprox(w, env.client_batch(ids), rngs)
+        client_w = jax.tree.map(lambda a: a[0], client_params)
+        bytes_up += env.model_bytes
+        staleness = server_version - start_version
+        a_eff = bc.alpha * (1.0 + staleness) ** (-bc.staleness_exp)
+        w = jax.tree.map(lambda g, l: (1 - a_eff) * g + a_eff * l, w, client_w)
+        server_version += 1
+        t += 1
+        q.push(float(env.tm.latencies[c]) * (1 + rng.uniform(0, 0.1)),
+               (c, server_version))
+        if t % bc.eval_every == 0 or t == bc.total_updates:
+            acc, var = env.evaluate(w)
+            metrics.record(now, t, acc, var, bytes_up, bytes_down)
+    return metrics
+
+
+# ---------------------------------------------------------------------------
+# parity + determinism
+# ---------------------------------------------------------------------------
+
+def _assert_trajectory_close(m_new, m_ref, bytes_rtol=0.05):
+    """Rounds/times/accuracy must match the seed loop; bytes are allowed a
+    tolerance for the sampled wire-ratio accounting approximation."""
+    assert m_new.rounds == m_ref.rounds
+    np.testing.assert_allclose(m_new.times, m_ref.times, rtol=1e-9)
+    np.testing.assert_allclose(m_new.acc, m_ref.acc, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(m_new.acc_var, m_ref.acc_var,
+                               rtol=1e-5, atol=1e-9)
+    np.testing.assert_allclose(m_new.bytes_up, m_ref.bytes_up,
+                               rtol=bytes_rtol)
+    np.testing.assert_allclose(m_new.bytes_down, m_ref.bytes_down,
+                               rtol=bytes_rtol)
+
+
+@pytest.mark.parametrize("precision", [4, None])
+def test_fedat_parity(env, precision):
+    fc = FedATConfig(total_updates=20, eval_every=5, precision=precision)
+    _assert_trajectory_close(run_fedat(env, fc), _seed_fedat(env, fc))
+
+
+def test_fedat_parity_unweighted_noprox(env):
+    fc = FedATConfig(total_updates=12, eval_every=6, weighted=False,
+                     use_prox=False)
+    _assert_trajectory_close(run_fedat(env, fc), _seed_fedat(env, fc))
+
+
+def test_fedavg_parity(env):
+    bc = BaselineConfig(total_updates=12, eval_every=4)
+    _assert_trajectory_close(run_fedavg(env, bc), _seed_fedavg(env, bc))
+
+
+def test_tifl_parity(env):
+    bc = BaselineConfig(total_updates=12, eval_every=4)
+    _assert_trajectory_close(run_tifl(env, bc), _seed_tifl(env, bc))
+
+
+def test_fedasync_parity(env):
+    bc = BaselineConfig(total_updates=20, eval_every=5)
+    _assert_trajectory_close(run_fedasync(env, bc), _seed_fedasync(env, bc))
+
+
+def test_determinism_same_seed_identical_metrics(env):
+    fc = FedATConfig(total_updates=10, eval_every=5, seed=3)
+    m1, m2 = run_fedat(env, fc), run_fedat(env, fc)
+    assert m1.rounds == m2.rounds
+    assert m1.times == m2.times
+    assert m1.acc == m2.acc
+    assert m1.bytes_up == m2.bytes_up and m1.bytes_down == m2.bytes_down
+
+    bc = BaselineConfig(total_updates=8, eval_every=4, seed=3)
+    for fn in (run_fedavg, run_tifl, run_fedasync):
+        a, b = fn(env, bc), fn(env, bc)
+        assert a.times == b.times and a.acc == b.acc
+
+
+def test_seed_changes_trajectory(env):
+    m0 = run_fedat(env, FedATConfig(total_updates=8, eval_every=8, seed=0))
+    m1 = run_fedat(env, FedATConfig(total_updates=8, eval_every=8, seed=1))
+    assert m0.times != m1.times

@@ -2,7 +2,8 @@
 contracts, cross-checked against an actual strongly-convex FedAT run."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis import given, settings, st  # property tests skip without hypothesis
 
 from repro.core import theory
 from repro.core.theory import Regime

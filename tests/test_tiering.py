@@ -1,7 +1,8 @@
 """Tiering module tests (client partitioning by response latency)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis import given, settings, st  # property tests skip without hypothesis
 
 from repro.core import tiering
 
