@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke
+.PHONY: test bench-smoke bench-engine
 
 test:
 	$(PY) -m pytest -x -q
@@ -12,3 +12,8 @@ test:
 # jax-version incompatibility in interpret mode (see test_kernels skips)
 bench-smoke:
 	$(PY) -m benchmarks.run codec codec_e2e
+
+# engine hot-path throughput (events/sec per strategy) + machine-readable
+# JSON for cross-PR perf tracking
+bench-engine:
+	$(PY) -m benchmarks.run engine --json BENCH_engine.json

@@ -7,12 +7,18 @@ data, 40 clients / 5 tiers, the paper's delay bands & dropout).
 
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run table1 fig5 kernels
+  PYTHONPATH=src python -m benchmarks.run engine --json BENCH_engine.json
+
+``--json PATH`` additionally writes the structured results of the
+``engine`` target (events/sec, per-event us, fused-step trace counts) so
+the perf trajectory is machine-readable across PRs.
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
-from typing import Dict, List
+from typing import Any, Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -174,6 +180,47 @@ def codec_e2e():
              f"acc={m.best_acc:.3f};total_mb={total_mb:.1f}")
 
 
+#: structured results for ``--json`` (filled by the engine target)
+JSON_DOC: Dict[str, Any] = {"bench": "engine", "results": []}
+
+
+def engine():
+    """Engine hot-path throughput: events/sec + per-event us per strategy
+    on the 40-client bench env.  One warm run amortizes the single fused
+    compile, then a timed run measures the steady state; the executor's
+    trace counters document that no shape-driven retraces occurred."""
+    env = _env(2, seed=6)
+    runs = [
+        ("fedat", 120,
+         lambda n: run_fedat(env, FedATConfig(total_updates=n,
+                                              eval_every=15))),
+        ("fedavg", 60,
+         lambda n: run_fedavg(env, BaselineConfig(total_updates=n,
+                                                  eval_every=15))),
+        ("tifl", 60,
+         lambda n: run_tifl(env, BaselineConfig(total_updates=n,
+                                                eval_every=15))),
+        ("fedasync", 120,
+         lambda n: run_fedasync(env, BaselineConfig(total_updates=n,
+                                                    eval_every=15))),
+    ]
+    for name, n, fn in runs:
+        fn(max(n // 10, 5))  # warm: compile the fused step once
+        t0 = time.perf_counter()
+        fn(n)
+        dt = time.perf_counter() - t0
+        ev_s = n / dt
+        emit(f"engine/{name}", dt / n * 1e6, f"events_per_sec={ev_s:.2f}")
+        JSON_DOC["results"].append({
+            "strategy": name, "total_updates": n,
+            "events_per_sec": round(ev_s, 3),
+            "us_per_event": round(dt / n * 1e6, 1),
+        })
+    JSON_DOC["trace_counts"] = {
+        "/".join(map(str, k)): v
+        for k, v in env.executor().trace_counts.items()}
+
+
 def kernels():
     """Kernel microbenches (interpret mode: correctness-path timing only)."""
     from repro.kernels import ops
@@ -239,16 +286,32 @@ ALL = {
     "fig7": fig7_participation,
     "codec": codec,
     "codec_e2e": codec_e2e,
+    "engine": engine,
     "kernels": kernels,
     "trainer": trainer,
 }
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(ALL)
+    argv = sys.argv[1:]
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        if i + 1 >= len(argv):
+            sys.exit("usage: benchmarks.run [targets...] --json PATH")
+        json_path = argv[i + 1]
+        argv = argv[:i] + argv[i + 2:]
+    which = argv or list(ALL)
+    if json_path and "engine" not in which:
+        sys.exit("--json records the engine target; add 'engine' to the "
+                 "requested targets")
     print("name,us_per_call,derived")
     for name in which:
         ALL[name]()
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(JSON_DOC, f, indent=2)
+        print(f"wrote {json_path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -56,6 +56,14 @@ class Codec(abc.ABC):
     """A lossy (or identity) link codec; see module docstring."""
 
     name: str = "codec"
+    #: whether ``lossy`` is jit-composable (pure jax ops / Pallas), i.e.
+    #: can run inside the fused round step (core/executor.py).  All
+    #: registered codecs are in-graph: ``none`` is the identity,
+    #: ``polyline`` rounds with jnp ops, ``quantize*`` runs the Pallas
+    #: kernel (interpret mode on CPU).  A future host-side codec (e.g.
+    #: one marshalling through Python bytes) must set this False and will
+    #: be rejected by the fused step with a clear error.
+    in_graph: bool = True
 
     def lossy(self, params: Any) -> Any:
         """In-graph encode->decode roundtrip (models the link's loss)."""
@@ -123,9 +131,15 @@ class PolylineCodec(Codec):
         self.name = f"polyline:{precision}"
 
     def lossy(self, params):
-        # the codec's exact lossy step: round to `precision` decimals
-        f = 10.0 ** self.precision
-        return jax.tree.map(lambda x: jnp.round(x * f) / f, params)
+        # the codec's exact lossy step: round to `precision` decimals.
+        # Written as multiply-by-reciprocal, not division: XLA rewrites
+        # x / const to x * (1/const) inside fused programs but not in
+        # op-by-op dispatch, so the division form is not bitwise
+        # reproducible between eager and jitted execution (the fused
+        # round step requires eager == in-graph, core/executor.py).
+        f = np.float32(10.0 ** self.precision)
+        inv = np.float32(1.0 / (10.0 ** self.precision))
+        return jax.tree.map(lambda x: jnp.round(x * f) * inv, params)
 
     def marshal(self, params):
         return polyline.marshal(params, self.precision)

@@ -32,22 +32,80 @@ def uniform_weights(n_tiers: int) -> jax.Array:
     return jnp.full((n_tiers,), 1.0 / n_tiers, jnp.float32)
 
 
+# ---------------------------------------------------------------------------
+# numpy twins for the per-event hot path (core/executor.py / strategies).
+#
+# The engine computes these tiny weight vectors once per popped event;
+# doing it with eager jnp ops costs a handful of XLA dispatches per event,
+# which is real money at 5+ events/sec.  The numpy versions are
+# *bitwise-identical* to the jnp versions above: the inputs are exact
+# small integers (update counts, sample counts), so the f32 sums are
+# exact regardless of accumulation order, and IEEE-754 division is
+# correctly rounded in both numpy and XLA.
+# ---------------------------------------------------------------------------
+
+def cross_tier_weights_host(update_counts) -> np.ndarray:
+    """Numpy twin of :func:`cross_tier_weights` (Eq. 3 weights)."""
+    counts = np.asarray(update_counts, np.float32)
+    rev = counts[::-1]
+    total = counts.sum(dtype=np.float32)
+    if total > 0:
+        return rev / np.maximum(total, np.float32(1.0))
+    return np.full_like(rev, 1.0 / rev.shape[0])
+
+
+def uniform_weights_host(n_tiers: int) -> np.ndarray:
+    """Numpy twin of :func:`uniform_weights`."""
+    return np.full((n_tiers,), 1.0 / n_tiers, np.float32)
+
+
+def client_weights_host(n_samples) -> np.ndarray:
+    """Numpy twin of :func:`client_weights` (Eq. 4 weights)."""
+    w = np.asarray(n_samples, np.float32)
+    return w / np.maximum(w.sum(dtype=np.float32), np.float32(1.0))
+
+
 def weighted_average(stacked_models: Any, weights: jax.Array) -> Any:
-    """stacked_models: pytree with leading dim M -> weighted mean pytree."""
+    """stacked_models: pytree with leading dim M -> weighted mean pytree.
+
+    The product is pinned behind an optimization barrier so the weighted
+    sum rounds identically whether this runs op-by-op or inside the fused
+    round step (core/executor.py): XLA otherwise contracts the multiply
+    into the reduction (FMA) in fused programs, which changes the f32
+    rounding versus eager dispatch and breaks bitwise trajectory parity.
+    """
     def avg(leaf):
         w = weights.reshape((-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
-        return jnp.sum(leaf.astype(jnp.float32) * w, axis=0).astype(leaf.dtype)
+        prod = jax.lax.optimization_barrier(leaf.astype(jnp.float32) * w)
+        return jnp.sum(prod, axis=0).astype(leaf.dtype)
     return jax.tree.map(avg, stacked_models)
+
+
+def client_weights(n_samples: jax.Array) -> jax.Array:
+    """Eq. 4 normalized client weights: n_k / N_c (zero-count slots get
+    exactly 0).
+
+    The fused round step (core/executor.py) evaluates this *eagerly* per
+    event and passes the result in as data: the normalizing division must
+    run op-by-op, because XLA rewrites division inside fused programs
+    (reciprocal-multiply) and that breaks bitwise trajectory parity with
+    the eager seed loops.
+    """
+    w = jnp.asarray(n_samples).astype(jnp.float32)
+    return w / jnp.maximum(jnp.sum(w), 1.0)
 
 
 def intra_tier_average(client_models: Any, n_samples: jax.Array) -> Any:
     """FedAvg within a tier (Eq. 4): weight client k by n_k / N_c.
 
     client_models: pytree with leading dim = #selected clients.
+
+    Fixed-shape padding contract (core/executor.py): slots with
+    ``n_samples == 0`` contribute exactly-zero terms to both the weight
+    normalizer and the weighted sum, so padding a shrunken sample to a
+    fixed fan-out with zero-count slots is bitwise-neutral.
     """
-    w = n_samples.astype(jnp.float32)
-    w = w / jnp.maximum(jnp.sum(w), 1.0)
-    return weighted_average(client_models, w)
+    return weighted_average(client_models, client_weights(n_samples))
 
 
 def global_model(tier_models: Any, update_counts) -> Any:

@@ -27,11 +27,16 @@ def make_client_update(
     prox_lambda: float = 0.4,
     max_samples: int = 128,
     solver: str = "adam",
+    jit: bool = True,
 ) -> Callable:
     """Returns update(global_params, client_batch, rng) vmapped over clients.
 
     client_batch: {"x": (C, N, ...), "y": (C, N), "mask": (C, N)}.
     Output: (client_params stacked (C, ...), local loss (C,)).
+
+    ``jit=False`` returns the un-jitted body so callers can compose it
+    inside a larger jitted program (the fused round step in
+    core/executor.py); ``jax.jit`` of that body is the ``jit=True`` fn.
     """
 
     def loss_fn(params, global_params, x, y, mask):
@@ -95,12 +100,11 @@ def make_client_update(
         (params, _), losses = jax.lax.scan(epoch_body, (params, opt), rngs)
         return params, losses[-1]
 
-    @jax.jit
     def update(global_params, batch, rngs):
         fn = lambda x, y, m, r: one_client(global_params, x, y, m, r)
         return jax.vmap(fn)(batch["x"], batch["y"], batch["mask"], rngs)
 
-    return update
+    return jax.jit(update) if jit else update
 
 
 def make_eval_fn(apply_fn: Callable) -> Callable:

@@ -28,7 +28,6 @@ import dataclasses
 import enum
 from typing import Any
 
-import jax
 import numpy as np
 
 from repro.core.scheduler import EventQueue, Metrics
@@ -62,24 +61,30 @@ class Outcome(enum.Enum):
 
 @dataclasses.dataclass
 class EngineContext:
-    """Mutable per-run state handed to every strategy hook."""
+    """Mutable per-run state handed to every strategy hook.
+
+    ``executor`` is the engine-owned :class:`~repro.core.executor.
+    RoundExecutor`: the fused, fixed-shape, device-resident round step
+    that strategies parameterize (prox on/off, codec, aggregation
+    weights).  It replaces the old per-event ``local_train`` leg — the
+    whole downlink → train → uplink → aggregate pipeline now runs as one
+    jitted call over resident data (DESIGN.md §Perf).
+
+    ``draw_seed`` is the one host rng draw per training event; its
+    position in event order is the parity contract with the seed loops.
+    """
     q: EventQueue
     rng: np.random.Generator
     metrics: Metrics
     cfg: EngineConfig
+    executor: Any = None
     bytes_up: float = 0.0
     bytes_down: float = 0.0
     t_global: int = 0
 
-    def local_train(self, env: SimEnv, w: Any, ids: np.ndarray,
-                    use_prox: bool = False) -> Any:
-        """Shared local-training leg: one jitted vmapped update over the
-        selected clients.  Consumes exactly one ``rng.integers`` draw."""
-        rngs = jax.random.split(
-            jax.random.PRNGKey(self.rng.integers(2 ** 31)), len(ids))
-        fn = env.update_fn if use_prox else env.update_fn_noprox
-        client_params, _ = fn(w, env.client_batch(ids), rngs)
-        return client_params
+    def draw_seed(self) -> int:
+        """The per-event PRNG seed draw (exactly one ``rng.integers``)."""
+        return int(self.rng.integers(2 ** 31))
 
 
 class ServerStrategy(abc.ABC):
@@ -122,7 +127,7 @@ def run_engine(env: SimEnv, strategy: ServerStrategy,
     ctx = EngineContext(
         q=EventQueue(),
         rng=np.random.default_rng(cfg.seed + strategy.seed_offset),
-        metrics=Metrics(), cfg=cfg)
+        metrics=Metrics(), cfg=cfg, executor=env.executor())
     strategy.bind(env, cfg)
     strategy.bootstrap(env, ctx)
 

@@ -1,0 +1,234 @@
+"""Fused, fixed-shape, device-resident round execution (DESIGN.md §Perf).
+
+The engine's hot path used to pay three host-side taxes per popped event:
+re-uploading the selected clients' data from numpy, retracing the client
+update whenever dropout shrank the sample to a new length, and running the
+Eq. 4 / Eq. 3 aggregation as a swarm of tiny un-jitted dispatches.  The
+:class:`RoundExecutor` removes all three:
+
+* **Resident data plane** — ``SimEnv`` uploads the padded train stacks to
+  the device once; per-event client selection is an in-graph ``jnp.take``
+  over a fixed-length id vector.
+* **Fixed-shape padding contract** — a dropout-shrunken sample of ``n``
+  live clients is padded to ``clients_per_round`` slots by repeating a
+  live id with a **zero aggregation weight**.  Adding exactly-zero terms
+  to the Eq. 4 weighted sum is bitwise-neutral, so the trajectory is
+  identical to the variable-shape path while the jitted step compiles
+  exactly once per strategy configuration.
+* **Fused round step** — downlink codec ``lossy`` → gather → vmapped
+  local train → uplink ``lossy`` → Eq. 4 intra-tier average →
+  ``tier_models.at[m].set`` → Eq. 3 cross-tier aggregation run as one
+  jitted call, with buffer donation for the server-state arguments on
+  backends that support it (TPU/GPU; CPU ignores donation).
+
+Bitwise parity with the eager seed loops constrains what may live inside
+the fused program: XLA rewrites division into reciprocal-multiply and
+contracts multiply-into-reduction (FMA) when it can fuse, and neither
+rewrite happens in op-by-op dispatch.  So the tiny aggregation *weight*
+vectors (Eq. 4 client weights, Eq. 3 cross-tier weights) are computed
+eagerly per event and passed in as data, and
+:func:`~repro.core.aggregation.weighted_average` pins its product behind
+an optimization barrier; the model-sized math (train, codec, averages,
+tier-slot scatter) all stays in-graph.
+
+RNG parity: the seed loops draw ``rng.integers(2**31)`` per event and
+``jax.random.split`` to the *live* client count.  ``split(key, K)`` is not
+prefix-stable in ``split(key, n)``, so the executor splits host-side to
+``n`` and pads the key array to ``K`` rows — padded slots train on garbage
+keys but carry zero weight.
+
+Trace accounting: every fused step bumps ``trace_counts[step_key]`` at
+trace time (a Python side effect inside the jitted function body), which
+is what ``tests/test_round_executor.py`` uses to assert zero shape-driven
+retraces across a dropout-laden run.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation
+
+
+def _donate(argnums: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Donate server-state buffers where the backend implements donation
+    (in-place updates instead of fresh allocations); CPU would only warn."""
+    return argnums if jax.default_backend() != "cpu" else ()
+
+
+def _pin(tree: Any) -> Any:
+    """Materialization point inside a fused step.
+
+    The parity oracle (the eager seed loops) rounds every pipeline stage
+    to f32 at an op boundary.  Inside one fused program XLA would fuse
+    across those boundaries and reassociate / FMA-contract the arithmetic,
+    producing ulp-level differences that chaotic training then amplifies.
+    Pinning each stage output with an optimization barrier reproduces the
+    eager rounding exactly while keeping everything else fused.
+    """
+    return jax.tree.map(jax.lax.optimization_barrier, tree)
+
+
+class RoundExecutor:
+    """Owns the device-resident data plane and the per-strategy fused round
+    steps.  Strategies parameterize a step (prox on/off, codec, aggregation
+    weights); the executor caches one compiled step per configuration.
+
+    One executor is cached per :class:`~repro.core.simulation.SimEnv`
+    (``env.executor()``) so repeated engine runs over the same environment
+    reuse the compile cache.
+    """
+
+    def __init__(self, env):
+        self.env = env
+        self.K = int(env.sc.clients_per_round)
+        self._steps: Dict[tuple, Any] = {}
+        #: step key -> number of times the step body was traced; a fixed-
+        #: shape step traces exactly once per configuration.
+        self.trace_counts: Dict[tuple, int] = {}
+
+    # ------------------------------------------------------------------
+    # host-side marshalling (tiny per-event vectors; the model-sized
+    # tensors never leave the device)
+    # ------------------------------------------------------------------
+    def _pad_ids(self, ids: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(ids (n,)) -> (padded ids (K,), padded sample counts (K,)).
+
+        Dead slots repeat a live id (valid gather target, finite params)
+        and get sample count 0, which zeroes them out of Eq. 4 exactly.
+        """
+        n = len(ids)
+        pid = np.empty(self.K, np.int32)
+        pid[:n] = ids
+        pid[n:] = ids[0] if n else 0
+        ns = np.zeros(self.K, np.float32)
+        ns[:n] = self.env.train["n_samples"][ids]
+        return pid, ns
+
+    def _pad_keys(self, seed: int, n: int) -> jax.Array:
+        """Split to the live count (rng parity with the seed loops), then
+        pad to K rows; padded rows are zero keys behind zero weights."""
+        keys = jax.random.split(jax.random.PRNGKey(seed), n)
+        if n == self.K:
+            return keys
+        pad = jnp.zeros((self.K - n,) + keys.shape[1:], keys.dtype)
+        return jnp.concatenate([keys, pad], axis=0)
+
+    def _gather(self, ids):
+        """In-graph client selection over the resident train stacks."""
+        data = self.env.train_dev
+        return {k: jnp.take(data[k], ids, axis=0)
+                for k in ("x", "y", "mask")}
+
+    # ------------------------------------------------------------------
+    # fused steps (one compile per configuration, cached)
+    # ------------------------------------------------------------------
+    def _bump(self, key: tuple) -> None:
+        self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
+
+    def _fedat_step(self, codec, use_prox: bool):
+        if not codec.in_graph:
+            raise NotImplementedError(
+                f"codec {codec.name!r} declares in_graph=False; the fused "
+                "round step needs a jit-composable lossy() for both links "
+                "(all registered codecs are in-graph — see DESIGN.md §Perf)")
+        key = ("fedat", codec.name, use_prox)
+        if key in self._steps:
+            return self._steps[key]
+        env = self.env
+        update = env.update_fn_raw if use_prox else env.update_fn_noprox_raw
+        lossy = codec.lossy
+
+        def step(w_global, tier_models, m, ids, w_intra, w_cross, keys):
+            self._bump(key)
+            w_sent = _pin(lossy(w_global))
+            client_params, _ = update(w_sent, self._gather(ids), keys)
+            client_params = _pin(lossy(_pin(client_params)))
+            tier_model = _pin(
+                aggregation.weighted_average(client_params, w_intra))
+            tier_models = jax.tree.map(lambda s, nw: s.at[m].set(nw),
+                                       tier_models, tier_model)
+            w_global = aggregation.weighted_average(tier_models, w_cross)
+            return w_global, tier_models
+
+        self._steps[key] = jax.jit(step, donate_argnums=_donate((0, 1)))
+        return self._steps[key]
+
+    def _fedavg_step(self):
+        key = ("fedavg",)
+        if key in self._steps:
+            return self._steps[key]
+        update = self.env.update_fn_noprox_raw
+
+        def step(w, ids, w_intra, keys):
+            self._bump(key)
+            client_params, _ = update(w, self._gather(ids), keys)
+            return aggregation.weighted_average(_pin(client_params), w_intra)
+
+        self._steps[key] = jax.jit(step, donate_argnums=_donate((0,)))
+        return self._steps[key]
+
+    def _fedasync_step(self):
+        key = ("fedasync",)
+        if key in self._steps:
+            return self._steps[key]
+        update = self.env.update_fn_noprox_raw
+
+        def step(w, cid, c_glob, c_loc, keys):
+            self._bump(key)
+            client_params, _ = update(w, self._gather(cid), keys)
+            client_w = _pin(jax.tree.map(lambda a: a[0], client_params))
+            # pin both products: the eager oracle materializes them before
+            # the add, which XLA would otherwise contract into an FMA
+            return jax.tree.map(
+                lambda g, l: (jax.lax.optimization_barrier(c_glob * g)
+                              + jax.lax.optimization_barrier(c_loc * l)),
+                w, client_w)
+
+        self._steps[key] = jax.jit(step, donate_argnums=_donate((0,)))
+        return self._steps[key]
+
+    # ------------------------------------------------------------------
+    # public per-event entry points
+    # ------------------------------------------------------------------
+    def fedat_round(self, w_global, tier_models, m: int, ids: np.ndarray,
+                    seed: int, *, codec, use_prox: bool, cross_weights):
+        """One FedAT tier-completion round (Algorithm 1 steps 1-5), fused.
+
+        ``cross_weights`` is the (M,) Eq. 3 weight vector, computed
+        *eagerly* by the strategy from its update counts (see
+        :func:`~repro.core.aggregation.client_weights` on why weight
+        normalization must stay out of the fused program).  Returns
+        ``(w_global, tier_models)``.
+
+        Donation contract: the server-state arguments (``w_global``,
+        ``tier_models``) may be donated on TPU/GPU — callers must pass
+        buffers they own (strategies copy ``env.params0`` at bind time)
+        and replace their references with the returned values.
+        """
+        step = self._fedat_step(codec, use_prox)
+        pid, ns = self._pad_ids(ids)
+        keys = self._pad_keys(seed, len(ids))
+        return step(w_global, tier_models, np.int32(m), pid,
+                    aggregation.client_weights_host(ns), cross_weights, keys)
+
+    def fedavg_round(self, w, ids: np.ndarray, seed: int):
+        """One synchronous FedAvg round over the sampled clients, fused."""
+        step = self._fedavg_step()
+        pid, ns = self._pad_ids(ids)
+        keys = self._pad_keys(seed, len(ids))
+        return step(w, pid, aggregation.client_weights_host(ns), keys)
+
+    def fedasync_round(self, w, client: int, a_eff: float, seed: int):
+        """One asynchronous client update with staleness mix-in, fused.
+
+        The interpolation coefficients are rounded to f32 host-side so the
+        in-graph math matches the seed loop's eager ``(1-a)*g + a*l``.
+        """
+        step = self._fedasync_step()
+        keys = jax.random.split(jax.random.PRNGKey(seed), 1)
+        cid = np.asarray([client], np.int32)
+        return step(w, cid, np.float32(1.0 - a_eff), np.float32(a_eff), keys)

@@ -66,6 +66,11 @@ class SimEnv:
                                       replace=False)
         self.dropout_time = {int(c): float(rng.uniform(50, 400))
                              for c in self.dropout_ids}
+        # vectorized liveness: per-client dropout instant (+inf = stable),
+        # so alive(now) is one array compare instead of a dict loop
+        self.dropout_at = np.full(sc.n_clients, np.inf)
+        for c, t in self.dropout_time.items():
+            self.dropout_at[c] = t
 
         # model + jitted client update / eval
         key = jax.random.PRNGKey(sc.seed)
@@ -77,16 +82,30 @@ class SimEnv:
             self.params0, self.apply_fn = cnn.make_model(
                 "logreg", key, n_features=sc.n_features,
                 n_classes=sc.n_classes)
-        self.update_fn = make_client_update(
+        # raw (un-jitted) update bodies compose inside the fused round
+        # step (core/executor.py); jitting the same bodies gives the
+        # standalone per-call entry points, so both paths share one trace
+        # source and identical numerics.
+        self.update_fn_raw = make_client_update(
             self.apply_fn, local_epochs=sc.local_epochs,
             batch_size=sc.batch_size, lr=sc.lr,
-            prox_lambda=sc.prox_lambda)
-        self.update_fn_noprox = make_client_update(
+            prox_lambda=sc.prox_lambda, jit=False)
+        self.update_fn_noprox_raw = make_client_update(
             self.apply_fn, local_epochs=sc.local_epochs,
-            batch_size=sc.batch_size, lr=sc.lr, prox_lambda=0.0)
+            batch_size=sc.batch_size, lr=sc.lr, prox_lambda=0.0, jit=False)
+        self.update_fn = jax.jit(self.update_fn_raw)
+        self.update_fn_noprox = jax.jit(self.update_fn_noprox_raw)
         self.eval_fn = make_eval_fn(self.apply_fn)
         self.model_bytes = sum(np.asarray(l).nbytes
                                for l in jax.tree.leaves(self.params0))
+
+        # device-resident data plane: the padded train stacks live on
+        # device once; per-event selection is an in-graph gather
+        # (core/executor.py), never a host->device copy
+        self.train_dev = {k: jnp.asarray(self.train[k])
+                          for k in ("x", "y", "mask")}
+        self._test_dev = None
+        self._executor = None
 
     def _stack_test(self):
         cap = max(len(c.y_test) for c in self.ds.clients)
@@ -102,12 +121,17 @@ class SimEnv:
         return {"x": xs, "y": ys, "mask": mask}
 
     # ------------------------------------------------------------------
+    def executor(self):
+        """The cached fused-round executor for this environment (the jit
+        cache lives on the executor, so repeated engine runs over one env
+        never recompile)."""
+        if self._executor is None:
+            from repro.core.executor import RoundExecutor
+            self._executor = RoundExecutor(self)
+        return self._executor
+
     def alive(self, now: float) -> np.ndarray:
-        out = np.ones(self.sc.n_clients, bool)
-        for c, t in self.dropout_time.items():
-            if now >= t:
-                out[c] = False
-        return out
+        return self.dropout_at > now
 
     def sample_clients(self, pool: np.ndarray, k: int,
                        rng: np.random.Generator) -> np.ndarray:
@@ -125,9 +149,10 @@ class SimEnv:
 
     def evaluate(self, params) -> Tuple[float, float]:
         """(weighted global accuracy, per-client accuracy variance)."""
-        accs = np.asarray(self.eval_fn(params, jnp.asarray(self.test["x"]),
-                                       jnp.asarray(self.test["y"]),
-                                       jnp.asarray(self.test["mask"])))
+        if self._test_dev is None:  # upload the test stack once
+            self._test_dev = tuple(jnp.asarray(self.test[k])
+                                   for k in ("x", "y", "mask"))
+        accs = np.asarray(self.eval_fn(params, *self._test_dev))
         weights = self.test["mask"].sum(1)
         glob = float((accs * weights).sum() / weights.sum())
         return glob, float(np.var(accs))

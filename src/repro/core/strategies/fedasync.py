@@ -8,7 +8,7 @@ discarded without rescheduling (its dropout is permanent).
 from __future__ import annotations
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
 from repro.core.engine import (EngineConfig, EngineContext, Outcome,
                                ServerStrategy)
@@ -24,7 +24,8 @@ class FedAsyncStrategy(ServerStrategy):
         self.staleness_exp = staleness_exp
 
     def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
-        self.w = env.params0
+        # copy: the fused step may donate this buffer (executor contract)
+        self.w = jax.tree.map(jnp.array, env.params0)
         self.server_version = 0
 
     def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
@@ -38,15 +39,13 @@ class FedAsyncStrategy(ServerStrategy):
         if not env.alive(now)[c]:
             return Outcome.DISCARD
         ctx.bytes_down += env.model_bytes
-        ids = np.asarray([c])
-        client_params = ctx.local_train(env, self.w, ids, use_prox=False)
-        client_w = jax.tree.map(lambda a: a[0], client_params)
-        ctx.bytes_up += env.model_bytes
-        # polynomial staleness weighting (FedAsync)
+        # polynomial staleness weighting (FedAsync); the train + staleness
+        # mix-in runs as one fused jitted step (core/executor.py)
         staleness = self.server_version - start_version
         a_eff = self.alpha * (1.0 + staleness) ** (-self.staleness_exp)
-        self.w = jax.tree.map(lambda g, l: (1 - a_eff) * g + a_eff * l,
-                              self.w, client_w)
+        self.w = ctx.executor.fedasync_round(self.w, c, a_eff,
+                                             ctx.draw_seed())
+        ctx.bytes_up += env.model_bytes
         self.server_version += 1
         ctx.q.push(float(env.tm.latencies[c]) * (1 + ctx.rng.uniform(0, 0.1)),
                    (c, self.server_version))

@@ -54,8 +54,12 @@ class FedATStrategy(ServerStrategy):
         M = env.tm.n_tiers
         self.tier_models = jax.tree.map(
             lambda l: jnp.stack([l] * M), env.params0)    # (M, ...)
+        # update counts stay host-side (tiny, and the Eq. 3 weights must
+        # be computed eagerly — see aggregation.client_weights); model
+        # state is device-resident, copied because the fused step may
+        # donate these buffers (executor donation contract)
         self.counts = np.zeros(M, np.int64)
-        self.w_global = env.params0
+        self.w_global = jax.tree.map(jnp.array, env.params0)
         self._ratio = self.codec.measure_ratio(env.params0,
                                                self.ratio_sample_elems)
 
@@ -80,30 +84,22 @@ class FedATStrategy(ServerStrategy):
                            (m, ids))
             return Outcome.DISCARD
 
-        # downlink: server -> selected clients (compressed global model)
-        w_sent = self.codec.lossy(self.w_global)
+        # one fused device step: codec downlink -> vmapped local train ->
+        # codec uplink -> Eq. 4 intra-tier average -> tier slot update ->
+        # Eq. 3 cross-tier aggregation (core/executor.py); byte accounting
+        # uses the *live* count, padding slots carry zero weight.  Eq. 3
+        # weights come from the post-increment counts and are computed
+        # eagerly (training never feeds back into them).
         ctx.bytes_down += len(ids) * env.model_bytes * self._ratio
-
-        # local training (vmapped over the tier's selected clients)
-        client_params = ctx.local_train(env, w_sent, ids,
-                                        use_prox=self.use_prox)
-
-        # uplink: clients -> server (compressed), then deCom + Eq. 4
-        client_params = self.codec.lossy(client_params)
-        ctx.bytes_up += len(ids) * env.model_bytes * self._ratio
-        tier_model = aggregation.intra_tier_average(client_params,
-                                                    env.n_samples(ids))
-        self.tier_models = jax.tree.map(
-            lambda s, nw: s.at[m].set(nw), self.tier_models, tier_model)
         self.counts[m] += 1
-
-        # Eq. 3 cross-tier weighted aggregation
         if self.weighted:
-            self.w_global = aggregation.global_model(
-                self.tier_models, jnp.asarray(self.counts))
+            cw = aggregation.cross_tier_weights_host(self.counts)
         else:
-            self.w_global = aggregation.weighted_average(
-                self.tier_models, aggregation.uniform_weights(len(self.counts)))
+            cw = aggregation.uniform_weights_host(len(self.counts))
+        self.w_global, self.tier_models = ctx.executor.fedat_round(
+            self.w_global, self.tier_models, m, ids, ctx.draw_seed(),
+            codec=self.codec, use_prox=self.use_prox, cross_weights=cw)
+        ctx.bytes_up += len(ids) * env.model_bytes * self._ratio
 
         # next round for this tier
         nxt = env.sample_clients(

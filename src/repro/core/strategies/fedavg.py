@@ -7,9 +7,10 @@ round head), so the engine's queue always holds exactly one round event.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation
 from repro.core.engine import (EngineConfig, EngineContext, Outcome,
                                ServerStrategy)
 from repro.core.simulation import SimEnv
@@ -24,7 +25,8 @@ class FedAvgStrategy(ServerStrategy):
     reschedule_on_empty = False
 
     def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
-        self.w = env.params0
+        # copy: the fused step may donate this buffer (executor contract)
+        self.w = jax.tree.map(jnp.array, env.params0)
 
     def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
         self._schedule(env, ctx)
@@ -50,10 +52,10 @@ class FedAvgStrategy(ServerStrategy):
             self._schedule(env, ctx)
             return Outcome.SKIP_ROUND
         ctx.bytes_down += len(ids) * env.model_bytes
-        client_params = ctx.local_train(env, self.w, ids, use_prox=False)
+        # fused round: gather resident data -> vmapped local train ->
+        # sample-weighted FedAvg, one jitted call (core/executor.py)
+        self.w = ctx.executor.fedavg_round(self.w, ids, ctx.draw_seed())
         ctx.bytes_up += len(ids) * env.model_bytes
-        self.w = aggregation.intra_tier_average(client_params,
-                                               env.n_samples(ids))
         self._schedule(env, ctx)
         return Outcome.STEP
 
