@@ -3,10 +3,14 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench-engine
+.PHONY: test bench-smoke bench-engine smoke-example
 
 test:
 	$(PY) -m pytest -x -q
+
+# spec-API quickstart as an executable smoke test (CI runs this)
+smoke-example:
+	$(PY) examples/quickstart.py --updates 12
 
 # codec + codec_e2e only: the attention/scan kernel benches hit a known
 # jax-version incompatibility in interpret mode (see test_kernels skips)

@@ -5,13 +5,18 @@ quantity for that table: accuracy, MB, ratio, ...).  Budget-aware: table
 benches use a reduced but structurally faithful setup (synthetic non-IID
 data, 40 clients / 5 tiers, the paper's delay bands & dropout).
 
+All FL-run benches are driven through the declarative spec API
+(:mod:`repro.api`) — one cached environment per scenario, and every
+structured result carries the spec hash that produced it.
+
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run table1 fig5 kernels
   PYTHONPATH=src python -m benchmarks.run engine --json BENCH_engine.json
 
 ``--json PATH`` additionally writes the structured results of the
-``engine`` target (events/sec, per-event us, fused-step trace counts) so
-the perf trajectory is machine-readable across PRs.
+``engine`` target (events/sec, per-event us, fused-step trace counts,
+per-strategy spec hashes) so the perf trajectory is machine-readable and
+attributable across PRs.
 """
 from __future__ import annotations
 
@@ -24,10 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.baselines import BaselineConfig, run_fedavg, run_fedasync, \
-    run_tifl
-from repro.core.fedat import FedATConfig, measure_ratio, run_fedat
-from repro.core.simulation import SimConfig, SimEnv
+from repro import api
+from repro.core.fedat import measure_ratio
 
 ROWS: List[str] = []
 
@@ -38,47 +41,54 @@ def emit(name: str, us: float, derived: str):
     print(row, flush=True)
 
 
-def _env(classes_per_client=2, seed=0, n_clients=40):
-    return SimEnv(SimConfig(
-        n_clients=n_clients, n_tiers=5, classes_per_client=classes_per_client,
-        samples_per_client=40, image_hw=8, clients_per_round=8,
-        local_epochs=2, n_unstable=4, seed=seed))
+def _spec(strategy="fedat", *, classes=2, seed=0, n_clients=40, cpr=8,
+          total=120, eval_every=15, codec=None, **kwargs):
+    """The bench scenario: 40 clients / 5 tiers, paper delay bands &
+    dropout, reduced budget."""
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_clients=n_clients, classes_per_client=classes,
+                          samples_per_client=40, image_hw=8, seed=seed),
+        tiers=api.TierSpec(n_tiers=5, clients_per_round=cpr, n_unstable=4),
+        strategy=api.StrategySpec(name=strategy, kwargs=dict(kwargs)),
+        transport=api.TransportSpec(codec=codec),
+        engine=api.EngineSpec(total_updates=total, eval_every=eval_every,
+                              local_epochs=2))
 
 
-_BUDGET = dict(total_updates=120, eval_every=15)
-_BBUDGET = dict(total_updates=60, eval_every=15)
+def _timed(spec):
+    """(metrics, us_per_update); env materialization stays outside the
+    clock, but the first run over a fresh env pays the one-off fused-step
+    compile inside it (as the seed-era benches did) — the ``engine``
+    target is the steady-state number, it warms explicitly."""
+    run = api.build(spec)
+    t0 = time.perf_counter()
+    m = run.run().metrics
+    us = (time.perf_counter() - t0) * 1e6
+    return m, us / spec.engine.total_updates
+
+
+_BASE_TOTAL, _BASELINE_TOTAL = 120, 60
 
 
 def table1_accuracy():
     """Table 1: best accuracy + per-client accuracy variance, per method,
     across non-IID levels."""
     for ncls in (2, 4, 10):  # 10 == iid
-        env = _env(classes_per_client=ncls)
-        t0 = time.perf_counter()
-        mf = run_fedat(env, FedATConfig(**_BUDGET))
-        us = (time.perf_counter() - t0) * 1e6
-        emit(f"table1/fedat/cls{ncls}", us / _BUDGET["total_updates"],
-             f"acc={mf.best_acc:.3f};var={mf.acc_var[-1]:.5f}")
-        for name, fn in (("fedavg", run_fedavg), ("tifl", run_tifl),
-                         ("fedasync", run_fedasync)):
-            t0 = time.perf_counter()
-            m = fn(env, BaselineConfig(**_BBUDGET))
-            us = (time.perf_counter() - t0) * 1e6
-            emit(f"table1/{name}/cls{ncls}", us / _BBUDGET["total_updates"],
+        m, us = _timed(_spec("fedat", classes=ncls, total=_BASE_TOTAL))
+        emit(f"table1/fedat/cls{ncls}", us,
+             f"acc={m.best_acc:.3f};var={m.acc_var[-1]:.5f}")
+        for name in ("fedavg", "tifl", "fedasync"):
+            m, us = _timed(_spec(name, classes=ncls, total=_BASELINE_TOTAL))
+            emit(f"table1/{name}/cls{ncls}", us,
                  f"acc={m.best_acc:.3f};var={m.acc_var[-1]:.5f}")
 
 
 def table2_comm_cost():
     """Table 2: MB transferred to reach a target accuracy (2-class)."""
-    env = _env(2)
     target = 0.45
-    runs = {
-        "fedat": run_fedat(env, FedATConfig(**_BUDGET)),
-        "fedavg": run_fedavg(env, BaselineConfig(**_BBUDGET)),
-        "tifl": run_tifl(env, BaselineConfig(**_BBUDGET)),
-        "fedasync": run_fedasync(env, BaselineConfig(**_BBUDGET)),
-    }
-    for name, m in runs.items():
+    for name in ("fedat", "fedavg", "tifl", "fedasync"):
+        total = _BASE_TOTAL if name == "fedat" else _BASELINE_TOTAL
+        m = api.run_spec(_spec(name, total=total)).metrics
         b = m.bytes_to_accuracy(target)
         emit(f"table2/{name}", 0.0,
              f"mb_to_{target}={'%.1f' % (b/1e6) if b else 'n/a'};"
@@ -87,18 +97,12 @@ def table2_comm_cost():
 
 def fig2_time_to_accuracy():
     """Fig. 2: simulated wall-clock to target accuracy."""
-    env = _env(2, seed=1)
     target = 0.40
-    runs = {
-        "fedat": run_fedat(env, FedATConfig(total_updates=120,
-                                            eval_every=10)),
-        "fedavg": run_fedavg(env, BaselineConfig(total_updates=60,
-                                                 eval_every=10)),
-        "tifl": run_tifl(env, BaselineConfig(total_updates=60,
-                                             eval_every=10)),
-        "fedasync": run_fedasync(env, BaselineConfig(total_updates=120,
-                                                     eval_every=10)),
-    }
+    runs = {}
+    for name in ("fedat", "fedavg", "tifl", "fedasync"):
+        total = 120 if name in ("fedat", "fedasync") else 60
+        runs[name] = api.run_spec(
+            _spec(name, seed=1, total=total, eval_every=10)).metrics
     tf = runs["fedat"].time_to_accuracy(target)
     for name, m in runs.items():
         t = m.time_to_accuracy(target)
@@ -109,10 +113,13 @@ def fig2_time_to_accuracy():
 
 
 def fig5_precision_tradeoff():
-    """Fig. 5: compression precision vs accuracy + bytes."""
-    env = _env(2, seed=2)
-    for prec in (3, 4, 6, None):
-        m = run_fedat(env, FedATConfig(precision=prec, **_BUDGET))
+    """Fig. 5: compression precision vs accuracy + bytes (a spec sweep
+    over the strategy's precision kwarg)."""
+    results = api.sweep(_spec("fedat", seed=2),
+                        {"strategy.kwargs.precision": [3, 4, 6, None]})
+    for res in results:
+        m = res.metrics
+        prec = res.spec.strategy.kwargs["precision"]
         total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
         emit(f"fig5/precision_{prec}", 0.0,
              f"acc={m.best_acc:.3f};total_mb={total_mb:.1f}")
@@ -120,9 +127,8 @@ def fig5_precision_tradeoff():
 
 def fig6_weighted_aggregation():
     """Fig. 6: Eq. 3 weighted aggregation vs uniform."""
-    env = _env(2, seed=3)
-    mw = run_fedat(env, FedATConfig(weighted=True, **_BUDGET))
-    mu = run_fedat(env, FedATConfig(weighted=False, **_BUDGET))
+    mw = api.run_spec(_spec("fedat", seed=3, weighted=True)).metrics
+    mu = api.run_spec(_spec("fedat", seed=3, weighted=False)).metrics
     emit("fig6/weighted", 0.0, f"acc={mw.best_acc:.3f}")
     emit("fig6/uniform", 0.0, f"acc={mu.best_acc:.3f}")
     emit("fig6/delta", 0.0, f"impr={(mw.best_acc-mu.best_acc):.3f}")
@@ -131,12 +137,9 @@ def fig6_weighted_aggregation():
 def fig7_participation():
     """Fig. 7 (appendix B.1): client participation level."""
     for cpr in (2, 8):
-        env = SimEnv(SimConfig(
-            n_clients=40, n_tiers=5, classes_per_client=2,
-            samples_per_client=40, image_hw=8, clients_per_round=cpr,
-            local_epochs=2, n_unstable=4, seed=4))
-        mf = run_fedat(env, FedATConfig(**_BUDGET))
-        ma = run_fedavg(env, BaselineConfig(**_BBUDGET))
+        mf = api.run_spec(_spec("fedat", seed=4, cpr=cpr)).metrics
+        ma = api.run_spec(
+            _spec("fedavg", seed=4, cpr=cpr, total=_BASELINE_TOTAL)).metrics
         emit(f"fig7/k{cpr}", 0.0,
              f"fedat={mf.best_acc:.3f};fedavg={ma.best_acc:.3f}")
 
@@ -169,14 +172,11 @@ def codec():
 
 def codec_e2e():
     """FedAT end-to-end per transport codec (engine + strategy + codec)."""
-    env = _env(2, seed=5)
-    for spec in ("none", "polyline:4", "quantize8", "quantize16"):
-        t0 = time.perf_counter()
-        m = run_fedat(env, FedATConfig(codec=spec, **_BBUDGET))
-        us = (time.perf_counter() - t0) * 1e6
+    for codec in ("none", "polyline:4", "quantize8", "quantize16"):
+        m, us = _timed(_spec("fedat", seed=5, total=_BASELINE_TOTAL,
+                             codec=codec))
         total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
-        emit(f"codec_e2e/fedat_{spec.replace(':', '_')}",
-             us / _BBUDGET["total_updates"],
+        emit(f"codec_e2e/fedat_{codec.replace(':', '_')}", us,
              f"acc={m.best_acc:.3f};total_mb={total_mb:.1f}")
 
 
@@ -188,26 +188,17 @@ def engine():
     """Engine hot-path throughput: events/sec + per-event us per strategy
     on the 40-client bench env.  One warm run amortizes the single fused
     compile, then a timed run measures the steady state; the executor's
-    trace counters document that no shape-driven retraces occurred."""
-    env = _env(2, seed=6)
-    runs = [
-        ("fedat", 120,
-         lambda n: run_fedat(env, FedATConfig(total_updates=n,
-                                              eval_every=15))),
-        ("fedavg", 60,
-         lambda n: run_fedavg(env, BaselineConfig(total_updates=n,
-                                                  eval_every=15))),
-        ("tifl", 60,
-         lambda n: run_tifl(env, BaselineConfig(total_updates=n,
-                                                eval_every=15))),
-        ("fedasync", 120,
-         lambda n: run_fedasync(env, BaselineConfig(total_updates=n,
-                                                    eval_every=15))),
-    ]
-    for name, n, fn in runs:
-        fn(max(n // 10, 5))  # warm: compile the fused step once
+    trace counters document that no shape-driven retraces occurred.  Each
+    JSON record carries the spec hash of the timed configuration."""
+    for name, n in (("fedat", 120), ("fedavg", 60), ("tifl", 60),
+                    ("fedasync", 120)):
+        spec = _spec(name, seed=6, total=n)
+        warm = spec.with_overrides(
+            {"engine.total_updates": max(n // 10, 5)})
+        api.build(warm).run()  # warm: compile the fused step once
+        run = api.build(spec)
         t0 = time.perf_counter()
-        fn(n)
+        run.run()
         dt = time.perf_counter() - t0
         ev_s = n / dt
         emit(f"engine/{name}", dt / n * 1e6, f"events_per_sec={ev_s:.2f}")
@@ -215,10 +206,14 @@ def engine():
             "strategy": name, "total_updates": n,
             "events_per_sec": round(ev_s, 3),
             "us_per_event": round(dt / n * 1e6, 1),
+            "spec_hash": spec.hash(),
         })
+    env = api.get_env(_spec("fedat", seed=6))
     JSON_DOC["trace_counts"] = {
         "/".join(map(str, k)): v
         for k, v in env.executor().trace_counts.items()}
+    JSON_DOC["spec_hashes"] = {r["strategy"]: r["spec_hash"]
+                               for r in JSON_DOC["results"]}
 
 
 def kernels():

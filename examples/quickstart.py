@@ -1,35 +1,54 @@
-"""Quickstart: FedAT vs FedAvg on synthetic non-IID data in ~2 minutes (CPU).
+"""Quickstart: FedAT vs FedAvg from one declarative ExperimentSpec (~2
+minutes on CPU; --updates 12 is the CI smoke setting).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--updates N]
+
+One spec describes the whole scenario — data skew, latency tiers, dropout,
+link codec, budget; strategies are swapped with a dotted-path override and
+share the cached environment (identical partitions/latencies/dropouts).
 """
-from repro.core.baselines import BaselineConfig, run_fedavg
-from repro.core.fedat import FedATConfig, run_fedat
-from repro.core.simulation import SimConfig, SimEnv
+import argparse
+
+from repro import api
 
 
-def main():
+def main(updates: int = 60):
     # 20 clients, 4 latency tiers (the paper's delay bands), 2-class non-IID
-    env = SimEnv(SimConfig(n_clients=20, n_tiers=4, classes_per_client=2,
-                           samples_per_client=40, image_hw=8,
-                           clients_per_round=5, local_epochs=2,
-                           n_unstable=2))
-    print(f"tiers: {[len(m) for m in env.tm.members]} clients each; "
-          f"latencies {env.tm.latencies.min():.1f}..{env.tm.latencies.max():.1f}s")
+    spec = api.ExperimentSpec(
+        data=api.DataSpec(n_clients=20, classes_per_client=2,
+                          samples_per_client=40, image_hw=8),
+        tiers=api.TierSpec(n_tiers=4, clients_per_round=5, n_unstable=2),
+        strategy=api.StrategySpec("fedat"),
+        engine=api.EngineSpec(total_updates=updates, eval_every=10,
+                              local_epochs=2))
 
-    fedat = run_fedat(env, FedATConfig(total_updates=60, eval_every=10))
-    fedavg = run_fedavg(env, BaselineConfig(total_updates=40, eval_every=10))
+    run = api.build(spec)
+    env = run.env
+    print(f"spec {spec.hash()}; tiers: {[len(m) for m in env.tm.members]} "
+          f"clients each; latencies {env.tm.latencies.min():.1f}.."
+          f"{env.tm.latencies.max():.1f}s")
 
-    print("\n              acc    var      sim-time  MB")
-    for name, m in (("FedAT", fedat), ("FedAvg", fedavg)):
-        s = m.summary()
+    fedat = run.run()
+    fedavg = api.run_spec(spec.with_overrides(
+        {"strategy.name": "fedavg",
+         "engine.total_updates": max(2 * updates // 3, 1)}))
+
+    print("\n              acc    var      sim-time  MB       spec")
+    for name, res in (("FedAT", fedat), ("FedAvg", fedavg)):
+        s = res.metrics.summary()
         print(f"  {name:8s} {s['best_acc']:.3f}  {s['final_var']:.4f}  "
-              f"{s['sim_time']:8.0f}s  {s['total_mb']:6.1f}")
+              f"{s['sim_time']:8.0f}s  {s['total_mb']:6.1f}  "
+              f"{res.spec_hash}")
     t = 0.35
-    tf, ta = fedat.time_to_accuracy(t), fedavg.time_to_accuracy(t)
+    tf = fedat.metrics.time_to_accuracy(t)
+    ta = fedavg.metrics.time_to_accuracy(t)
     if tf and ta:
         print(f"\n  time to {t:.0%} accuracy: FedAT {tf:.0f}s vs "
               f"FedAvg {ta:.0f}s  ({ta / tf:.1f}x faster)")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--updates", type=int, default=60,
+                    help="FedAT global update budget (CI smoke uses 12)")
+    main(ap.parse_args().updates)

@@ -1,33 +1,37 @@
-"""All four server strategies through the unified engine, plus FedAT over
-each transport codec (polyline vs the Pallas-kernel int8/int16 quantizer).
+"""The scenario plane as sweeps: all four server strategies through the
+unified engine, then FedAT over each transport codec — both as cartesian
+grids over one base ExperimentSpec (shared cached environment).
 
     PYTHONPATH=src python examples/strategy_codecs.py
 """
-from repro.core.engine import EngineConfig, run_strategy
-from repro.core.simulation import SimConfig, SimEnv
+from repro import api
 
 
 def main():
-    env = SimEnv(SimConfig(n_clients=20, n_tiers=4, classes_per_client=2,
-                           samples_per_client=40, image_hw=8,
-                           clients_per_round=5, local_epochs=2,
-                           n_unstable=2))
-    cfg = EngineConfig(total_updates=40, eval_every=10)
+    base = api.ExperimentSpec(
+        data=api.DataSpec(n_clients=20, classes_per_client=2,
+                          samples_per_client=40, image_hw=8),
+        tiers=api.TierSpec(n_tiers=4, clients_per_round=5, n_unstable=2),
+        engine=api.EngineSpec(total_updates=40, eval_every=10,
+                              local_epochs=2))
 
     print("strategy sweep (one event loop, four policies)")
     print("              acc    var      sim-time  MB")
-    for name in ("fedat", "fedavg", "tifl", "fedasync"):
-        m = run_strategy(env, name, cfg)
-        s = m.summary()
+    for res in api.sweep(base, {"strategy.name": ["fedat", "fedavg",
+                                                  "tifl", "fedasync"]}):
+        s = res.metrics.summary()
+        name = res.spec.strategy.name
         print(f"  {name:8s} {s['best_acc']:.3f}  {s['final_var']:.4f}  "
               f"{s['sim_time']:8.0f}s  {s['total_mb']:6.1f}")
 
     print("\nFedAT codec sweep (same protocol, different links)")
-    print("              acc    MB")
-    for codec in ("none", "polyline:4", "quantize8", "quantize16"):
-        m = run_strategy(env, "fedat", cfg, codec=codec)
-        s = m.summary()
-        print(f"  {codec:11s} {s['best_acc']:.3f}  {s['total_mb']:6.1f}")
+    print("              acc    MB      spec")
+    for res in api.sweep(base, {"transport.codec": ["none", "polyline:4",
+                                                    "quantize8",
+                                                    "quantize16"]}):
+        s = res.metrics.summary()
+        print(f"  {res.spec.transport.codec:11s} {s['best_acc']:.3f}  "
+              f"{s['total_mb']:6.1f}  {res.spec_hash}")
 
 
 if __name__ == "__main__":

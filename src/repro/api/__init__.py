@@ -1,0 +1,22 @@
+"""Declarative experiment API (DESIGN.md §API).
+
+    from repro import api
+
+    spec = api.ExperimentSpec(
+        data=api.DataSpec(n_clients=40, partitioner="dirichlet:0.3"),
+        strategy=api.StrategySpec("fedat", {"use_prox": True}),
+        transport=api.TransportSpec(codec="quantize8"),
+        engine=api.EngineSpec(total_updates=120))
+    result = api.build(spec).run()
+
+    api.sweep(spec, {"strategy.name": ["fedat", "fedavg"],
+                     "transport.codec": ["none", "quantize8"]})
+
+CLI: ``python -m repro.api.cli --spec exp.json --set strategy.name=fedat
+--sweep transport.codec=none,quantize8``.
+"""
+from repro.api.build import (Result, Run, build, clear_env_cache,  # noqa: F401
+                             get_env, run_spec, sweep)
+from repro.api.spec import (SPEC_VERSION, DataSpec, EngineSpec,  # noqa: F401
+                            ExperimentSpec, SpecError, StrategySpec,
+                            TierSpec, TransportSpec)

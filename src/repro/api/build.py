@@ -1,0 +1,157 @@
+"""Materialize and execute :class:`~repro.api.spec.ExperimentSpec` runs.
+
+``build(spec)`` turns the declarative spec into a :class:`Run` handle —
+``(SimEnv, ServerStrategy, EngineConfig)`` wired together — with the
+environment drawn from a process-wide cache keyed on the spec's
+environment hash, so sweeping the strategy/codec/budget plane over one
+scenario reuses a single materialized environment (and its compiled
+fused-round steps).  ``Run.run()`` executes the event loop and returns a
+:class:`Result` carrying the metrics, the spec echo, and the spec hash
+for provenance; ``sweep()`` expands a cartesian grid of dotted-path
+overrides into tagged runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import itertools
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+from repro.api.spec import ExperimentSpec, SpecError
+from repro.core import strategies
+from repro.core.engine import EngineConfig, ServerStrategy, run_engine
+from repro.core.scheduler import Metrics
+from repro.core.simulation import SimEnv
+
+#: env_hash -> SimEnv; one materialized environment per (data, tiers,
+#: local-training) configuration, shared across strategy/codec sweeps
+_ENV_CACHE: Dict[str, SimEnv] = {}
+
+
+def clear_env_cache() -> None:
+    """Drop all cached environments (frees device-resident train stacks)."""
+    _ENV_CACHE.clear()
+
+
+def get_env(spec: ExperimentSpec) -> SimEnv:
+    """The cached environment for a spec's (data, tiers, local) section."""
+    key = spec.env_hash()
+    if key not in _ENV_CACHE:
+        _ENV_CACHE[key] = SimEnv(spec.to_sim_config())
+    return _ENV_CACHE[key]
+
+
+def _make_strategy(spec: ExperimentSpec) -> ServerStrategy:
+    factory = strategies.STRATEGIES[spec.strategy.name]
+    kwargs = dict(spec.strategy.kwargs)
+    params = inspect.signature(factory).parameters
+    if "codec" in params:
+        kwargs.setdefault("codec", spec.transport.codec)
+    elif spec.transport.codec is not None:
+        accepting = sorted(
+            n for n, f in strategies.STRATEGIES.items()
+            if "codec" in inspect.signature(f).parameters)
+        raise SpecError(
+            f"strategy {spec.strategy.name!r} does not take a transport "
+            f"codec; codec-capable strategies: {accepting}")
+    return factory(**kwargs)
+
+
+@dataclasses.dataclass
+class Result:
+    """One finished run: metrics + the exact configuration that made them."""
+    spec: ExperimentSpec
+    spec_hash: str
+    metrics: Metrics
+    tag: str = ""
+
+    def summary(self) -> Dict[str, Any]:
+        s = self.metrics.summary()
+        s["spec_hash"] = self.spec_hash
+        if self.tag:
+            s["tag"] = self.tag
+        return s
+
+
+@dataclasses.dataclass
+class Run:
+    """A materialized experiment, ready to execute (repeatable: each
+    ``run()`` restarts the engine from the bound strategy's fresh state)."""
+    spec: ExperimentSpec
+    env: SimEnv
+    strategy: ServerStrategy
+    cfg: EngineConfig
+    tag: str = ""
+
+    def run(self, on_eval: Optional[Callable[[dict], None]] = None
+            ) -> Result:
+        """Execute the event loop; ``on_eval`` streams each recorded eval
+        point (dict with time/round/acc/acc_var/bytes_up/bytes_down)."""
+        metrics = run_engine(self.env, self.strategy, self.cfg,
+                             on_record=on_eval)
+        return Result(spec=self.spec, spec_hash=self.spec.hash(),
+                      metrics=metrics, tag=self.tag)
+
+
+def build(spec: ExperimentSpec, env: Optional[SimEnv] = None) -> Run:
+    """Validate the spec and materialize ``(SimEnv, strategy, EngineConfig)``.
+
+    ``env`` injects an already-built environment (the legacy ``run_*``
+    shims use this); when provided it *overrides* the spec's data/tiers
+    materialization — the caller vouches that it matches.
+    """
+    spec.validate()
+    if env is None:
+        env = get_env(spec)
+    return Run(
+        spec=spec, env=env, strategy=_make_strategy(spec),
+        cfg=EngineConfig(total_updates=spec.engine.total_updates,
+                         eval_every=spec.engine.eval_every,
+                         seed=spec.engine.seed,
+                         retier_every=spec.tiers.retier_every,
+                         retier_drift=spec.tiers.retier_drift))
+
+
+def run_spec(spec: ExperimentSpec, env: Optional[SimEnv] = None,
+             on_eval: Optional[Callable[[dict], None]] = None) -> Result:
+    """Build + run in one call."""
+    return build(spec, env=env).run(on_eval=on_eval)
+
+
+def sweep(base_spec: ExperimentSpec, grid: Dict[str, Iterable[Any]],
+          on_result: Optional[Callable[[Result], None]] = None
+          ) -> List[Result]:
+    """Cartesian expansion of a dotted-path override grid into tagged runs.
+
+        sweep(spec, {"strategy.name": ["fedat", "fedavg"],
+                     "transport.codec": ["none", "quantize8"]})
+
+    Axis order follows the grid's insertion order; every combination is
+    validated before any run executes (a typo fails fast, not mid-sweep).
+    Runs sharing a (data, tiers, local) section reuse one cached
+    environment.  ``on_result`` streams each finished :class:`Result`.
+    """
+    if not grid:
+        raise SpecError("sweep grid is empty; pass at least one "
+                        "dotted-path axis, e.g. {'strategy.name': [...]}")
+    axes = [(path, list(values)) for path, values in grid.items()]
+    for path, values in axes:
+        if not values:
+            raise SpecError(f"sweep axis {path!r} has no values")
+    combos = list(itertools.product(*(vals for _, vals in axes)))
+    runs = []
+    for combo in combos:
+        overrides = {path: v for (path, _), v in zip(axes, combo)}
+        spec = base_spec.with_overrides(overrides)
+        spec.validate()
+        tag = ",".join(f"{path}={v}" for path, v in overrides.items())
+        runs.append((spec, tag))
+    results = []
+    for spec, tag in runs:
+        run = build(spec)
+        run.tag = tag
+        res = run.run()
+        if on_result is not None:
+            on_result(res)
+        results.append(res)
+    return results

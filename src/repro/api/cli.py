@@ -1,0 +1,129 @@
+"""Experiment CLI over the declarative spec API.
+
+    # one run: paper defaults + dotted-path overrides
+    PYTHONPATH=src python -m repro.api.cli \
+        --set data.n_clients=40 --set strategy.name=fedat \
+        --set transport.codec=quantize8
+
+    # a spec file + a cartesian sweep (strategy x codec), results to JSON
+    PYTHONPATH=src python -m repro.api.cli --spec exp.json \
+        --sweep strategy.name=fedat,fedavg \
+        --sweep transport.codec=none,quantize8 --out results.json
+
+``--set PATH=VALUE`` applies one override; ``--sweep PATH=V1,V2,...``
+adds a grid axis.  Values parse as JSON when possible (``null`` -> None,
+``false`` -> False, numbers), else as strings.  ``--out`` writes one
+record per run: tag, spec hash, full spec echo, summary, and the eval
+trajectory — enough to reproduce or re-plot any run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+from repro import api
+
+
+def _parse_value(s: str) -> Any:
+    try:
+        return json.loads(s)
+    except json.JSONDecodeError:
+        return s
+
+
+def _parse_assignment(arg: str, flag: str) -> tuple:
+    path, eq, val = arg.partition("=")
+    if not eq or not path:
+        raise SystemExit(f"{flag} expects PATH=VALUE, got {arg!r}")
+    return path, val
+
+
+def _result_record(res: api.Result) -> Dict[str, Any]:
+    m = res.metrics
+    return {
+        "tag": res.tag, "spec_hash": res.spec_hash,
+        "spec": res.spec.to_dict(), "summary": res.summary(),
+        "trajectory": {
+            "times": m.times, "rounds": m.rounds, "acc": m.acc,
+            "acc_var": m.acc_var, "bytes_up": m.bytes_up,
+            "bytes_down": m.bytes_down,
+        },
+    }
+
+
+def _print_row(res: api.Result) -> None:
+    s = res.metrics.summary()
+    print(f"  {res.tag or '(single run)':48s} {res.spec_hash}  "
+          f"acc={s['best_acc']:.3f}  var={s['final_var']:.4f}  "
+          f"t={s['sim_time']:7.0f}s  {s['total_mb']:7.1f}MB", flush=True)
+
+
+def main(argv: List[str] = None) -> List[api.Result]:
+    ap = argparse.ArgumentParser(
+        prog="repro.api.cli",
+        description="Run declarative FL experiments (ExperimentSpec).")
+    ap.add_argument("--spec", metavar="FILE",
+                    help="JSON ExperimentSpec (default: paper defaults)")
+    ap.add_argument("--set", action="append", default=[], dest="sets",
+                    metavar="PATH=VALUE",
+                    help="override one spec field (repeatable), e.g. "
+                         "--set strategy.name=fedat")
+    ap.add_argument("--sweep", action="append", default=[], dest="sweeps",
+                    metavar="PATH=V1,V2,...",
+                    help="add a cartesian grid axis (repeatable), e.g. "
+                         "--sweep transport.codec=none,quantize8")
+    ap.add_argument("--out", metavar="FILE",
+                    help="write per-run results (spec echo + hash + "
+                         "trajectory) as JSON")
+    ap.add_argument("--print-spec", action="store_true",
+                    help="print the resolved base spec and exit")
+    args = ap.parse_args(argv)
+
+    if args.spec:
+        with open(args.spec) as f:
+            spec = api.ExperimentSpec.from_dict(json.load(f))
+    else:
+        spec = api.ExperimentSpec()
+
+    try:
+        overrides = {}
+        for s in args.sets:
+            path, val = _parse_assignment(s, "--set")
+            overrides[path] = _parse_value(val)
+        if overrides:
+            spec = spec.with_overrides(overrides)
+        if args.print_spec:
+            print(spec.to_json())
+            return []
+        spec.validate()
+
+        grid = {}
+        for s in args.sweeps:
+            path, vals = _parse_assignment(s, "--sweep")
+            grid[path] = [_parse_value(v) for v in vals.split(",")]
+
+        if grid:
+            axes = " x ".join(f"{k}[{len(v)}]" for k, v in grid.items())
+            print(f"base spec {spec.hash()}  sweep: {axes}", flush=True)
+            results = api.sweep(spec, grid, on_result=_print_row)
+        else:
+            print(f"spec {spec.hash()}", flush=True)
+            res = api.build(spec).run()
+            _print_row(res)
+            results = [res]
+    except api.SpecError as e:
+        raise SystemExit(f"spec error: {e}")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"base_spec_hash": spec.hash(),
+                       "runs": [_result_record(r) for r in results]},
+                      f, indent=2)
+        print(f"wrote {args.out}", file=sys.stderr)
+    return results
+
+
+if __name__ == "__main__":
+    main()

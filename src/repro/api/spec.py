@@ -1,0 +1,370 @@
+"""Declarative experiment specification (the user-facing config surface).
+
+One :class:`ExperimentSpec` composes the whole scenario space the paper
+spans — partition skew, tier counts, dropout profiles, codecs, re-tiering,
+server policy — from five nested sections:
+
+  * :class:`DataSpec`      what the clients hold (task, partitioner, sizes)
+  * :class:`TierSpec`      latency tiers, dropout profile, re-tiering cadence
+  * :class:`StrategySpec`  server policy by registry name + kwargs
+  * :class:`TransportSpec` the link codec by registry string
+  * :class:`EngineSpec`    budget, eval cadence, seed, local-training knobs
+
+The spec is plain data: ``to_dict``/``from_dict`` round-trip through JSON
+(``from_dict`` rejects unknown fields with the valid-field list), and
+``hash()`` is a stable content hash over the canonical JSON — stamped into
+bench artifacts so every result is attributable to an exact configuration.
+``validate()`` front-loads actionable errors (unknown strategy/codec/
+partitioner names list what *is* registered) before any expensive build.
+
+Registry extension points: strategies (``core/strategies/STRATEGIES``),
+codecs (``compress/transport.register_codec``), partitioners
+(``data/federated.parse_partitioner`` grammar).  See DESIGN.md §API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import inspect
+import json
+from typing import Any, Dict, Optional, Tuple
+
+from repro.compress import transport
+from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
+
+SPEC_VERSION = 1
+
+
+class SpecError(ValueError):
+    """A spec failed validation; the message says how to fix it."""
+
+
+def _strict_fields(cls, d: Dict[str, Any], section: str) -> Dict[str, Any]:
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - fields)
+    if unknown:
+        raise SpecError(
+            f"unknown field(s) {unknown} in {section} spec; "
+            f"valid fields: {sorted(fields)}")
+    return d
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise SpecError(msg)
+
+
+# ---------------------------------------------------------------------------
+# sections
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DataSpec:
+    """What each client holds.  ``seed`` drives the whole environment
+    materialization (partitions, latencies, dropout schedule, model init);
+    the engine's event-order rng is ``EngineSpec.seed``."""
+    task: str = "image"                  # image (CNN) | text (logreg)
+    n_clients: int = 100
+    n_classes: int = 10
+    partitioner: str = "#class"          # "#class" | "dirichlet:<alpha>"
+    classes_per_client: int = 2          # used by the "#class" partitioner
+    samples_per_client: int = 60
+    image_hw: int = 12
+    n_features: int = 128
+    seed: int = 0
+
+    def validate(self) -> None:
+        _require(self.task in ("image", "text"),
+                 f"data.task must be 'image' or 'text', got {self.task!r}")
+        _require(self.n_clients >= 1,
+                 f"data.n_clients must be >= 1, got {self.n_clients}")
+        _require(self.n_classes >= 2,
+                 f"data.n_classes must be >= 2, got {self.n_classes}")
+        _require(self.classes_per_client >= 1,
+                 f"data.classes_per_client must be >= 1, "
+                 f"got {self.classes_per_client}")
+        _require(self.samples_per_client >= 1,
+                 f"data.samples_per_client must be >= 1, "
+                 f"got {self.samples_per_client}")
+        from repro.data.federated import parse_partitioner
+        try:
+            parse_partitioner(self.partitioner)
+        except ValueError as e:
+            raise SpecError(f"data.partitioner: {e}")
+
+
+@dataclasses.dataclass
+class TierSpec:
+    """Latency tiers, the dropout profile, and re-tiering cadence."""
+    n_tiers: int = 5
+    clients_per_round: int = 10          # sample size per (tier) round
+    #: per-band (lo, hi) delay seconds on top of base_compute (paper §6.1)
+    delay_bands: Tuple[Tuple[float, float], ...] = PAPER_DELAY_BANDS
+    base_compute: float = 1.0
+    n_unstable: int = 10                 # permanent dropouts
+    dropout_window: Tuple[float, float] = (50.0, 400.0)
+    #: rebuild the tier map from drifted latencies every N global updates
+    #: (0 = never); wires core/tiering.retier into the engine loop
+    retier_every: int = 0
+    retier_drift: float = 0.2
+
+    def __post_init__(self):
+        self.delay_bands = tuple(
+            (float(lo), float(hi)) for lo, hi in self.delay_bands)
+        self.dropout_window = tuple(float(v) for v in self.dropout_window)
+
+    def validate(self, n_clients: int) -> None:
+        _require(1 <= self.n_tiers <= n_clients,
+                 f"tiers.n_tiers must be in [1, n_clients={n_clients}], "
+                 f"got {self.n_tiers}")
+        _require(self.clients_per_round >= 1,
+                 f"tiers.clients_per_round must be >= 1, "
+                 f"got {self.clients_per_round}")
+        _require(len(self.delay_bands) >= 1,
+                 "tiers.delay_bands needs at least one (lo, hi) band")
+        for i, (lo, hi) in enumerate(self.delay_bands):
+            _require(0 <= lo <= hi,
+                     f"tiers.delay_bands[{i}] must satisfy 0 <= lo <= hi, "
+                     f"got ({lo}, {hi})")
+        _require(0 <= self.n_unstable <= n_clients,
+                 f"tiers.n_unstable must be in [0, n_clients={n_clients}], "
+                 f"got {self.n_unstable}")
+        lo, hi = self.dropout_window
+        _require(0 <= lo <= hi,
+                 f"tiers.dropout_window must satisfy 0 <= lo <= hi, "
+                 f"got ({lo}, {hi})")
+        _require(self.retier_every >= 0,
+                 f"tiers.retier_every must be >= 0 (0 = never), "
+                 f"got {self.retier_every}")
+        _require(0 <= self.retier_drift < 1,
+                 f"tiers.retier_drift must be in [0, 1), "
+                 f"got {self.retier_drift}")
+
+
+@dataclasses.dataclass
+class StrategySpec:
+    """Server policy by registry name; kwargs are validated against the
+    strategy constructor's signature."""
+    name: str = "fedat"
+    kwargs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self) -> None:
+        from repro.core import strategies
+        if self.name not in strategies.STRATEGIES:
+            raise SpecError(
+                f"unknown strategy {self.name!r}; "
+                f"registered: {sorted(strategies.STRATEGIES)}")
+        if "codec" in self.kwargs:
+            raise SpecError(
+                "the link codec belongs in transport.codec, not "
+                "strategy.kwargs['codec'] (one spec field per dimension)")
+        params = inspect.signature(
+            strategies.STRATEGIES[self.name]).parameters
+        bad = sorted(k for k in self.kwargs if k not in params)
+        if bad:
+            raise SpecError(
+                f"strategy {self.name!r} does not accept kwargs {bad}; "
+                f"accepted: {sorted(params)}")
+
+
+@dataclasses.dataclass
+class TransportSpec:
+    """The link codec, by registry string (``none``, ``polyline:<p>``,
+    ``quantize8``, ``quantize16``, ...).  ``None`` keeps each strategy's
+    paper default (FedAT derives polyline from its ``precision`` kwarg;
+    the baselines run raw f32 links)."""
+    codec: Optional[str] = None
+
+    def validate(self) -> None:
+        if self.codec is None:
+            return
+        try:
+            transport.get_codec(self.codec)
+        except ValueError as e:
+            raise SpecError(f"transport.codec: {e}")
+
+
+@dataclasses.dataclass
+class EngineSpec:
+    """Run budget and the local-training execution knobs shared by every
+    strategy (they parameterize the client update the environment bakes
+    into its fused round step)."""
+    total_updates: int = 200
+    eval_every: int = 10
+    seed: int = 0
+    local_epochs: int = 3
+    batch_size: int = 10
+    lr: float = 1e-3
+    prox_lambda: float = 0.4
+
+    def validate(self) -> None:
+        _require(self.total_updates >= 1,
+                 f"engine.total_updates must be >= 1, "
+                 f"got {self.total_updates}")
+        _require(self.eval_every >= 1,
+                 f"engine.eval_every must be >= 1, got {self.eval_every}")
+        _require(self.local_epochs >= 1 and self.batch_size >= 1,
+                 "engine.local_epochs and engine.batch_size must be >= 1")
+
+
+# ---------------------------------------------------------------------------
+# the composed spec
+# ---------------------------------------------------------------------------
+
+_SECTIONS = {"data": DataSpec, "tiers": TierSpec, "strategy": StrategySpec,
+             "transport": TransportSpec, "engine": EngineSpec}
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    data: DataSpec = dataclasses.field(default_factory=DataSpec)
+    tiers: TierSpec = dataclasses.field(default_factory=TierSpec)
+    strategy: StrategySpec = dataclasses.field(default_factory=StrategySpec)
+    transport: TransportSpec = dataclasses.field(
+        default_factory=TransportSpec)
+    engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
+
+    # -- validation -----------------------------------------------------
+    def validate(self) -> "ExperimentSpec":
+        self.data.validate()
+        self.tiers.validate(self.data.n_clients)
+        self.strategy.validate()
+        self.transport.validate()
+        self.engine.validate()
+        return self
+
+    # -- serialization --------------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["tiers"]["delay_bands"] = [list(b)
+                                     for b in self.tiers.delay_bands]
+        d["tiers"]["dropout_window"] = list(self.tiers.dropout_window)
+        d["spec_version"] = SPEC_VERSION
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        version = d.pop("spec_version", SPEC_VERSION)
+        if version != SPEC_VERSION:
+            raise SpecError(f"spec_version {version} not supported "
+                            f"(this build reads version {SPEC_VERSION})")
+        unknown = sorted(set(d) - set(_SECTIONS))
+        if unknown:
+            raise SpecError(f"unknown section(s) {unknown} in experiment "
+                            f"spec; valid sections: {sorted(_SECTIONS)}")
+        parts = {}
+        for name, section_cls in _SECTIONS.items():
+            sub = d.get(name, {})
+            if not isinstance(sub, dict):
+                raise SpecError(f"section {name!r} must be an object, "
+                                f"got {type(sub).__name__}")
+            parts[name] = section_cls(
+                **_strict_fields(section_cls, sub, name))
+        return cls(**parts)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    # -- provenance -----------------------------------------------------
+    def canonical_json(self) -> str:
+        """Key-sorted, whitespace-free JSON: the hash input."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def hash(self) -> str:
+        """Stable 12-hex content hash for bench/result provenance."""
+        return hashlib.sha256(
+            self.canonical_json().encode()).hexdigest()[:12]
+
+    def env_dict(self) -> Dict[str, Any]:
+        """The sub-dict that determines :class:`SimEnv` materialization
+        (used as the environment cache key): data + tiers minus the
+        engine-owned re-tiering cadence, plus the local-training knobs."""
+        d = self.to_dict()
+        tiers = d["tiers"]
+        tiers.pop("retier_every"), tiers.pop("retier_drift")
+        eng = d["engine"]
+        local = {k: eng[k] for k in ("local_epochs", "batch_size", "lr",
+                                     "prox_lambda")}
+        return {"data": d["data"], "tiers": tiers, "local": local}
+
+    def env_hash(self) -> str:
+        return hashlib.sha256(json.dumps(
+            self.env_dict(), sort_keys=True,
+            separators=(",", ":")).encode()).hexdigest()[:12]
+
+    # -- overrides ------------------------------------------------------
+    def with_overrides(self, overrides: Dict[str, Any]) -> "ExperimentSpec":
+        """A new spec with dotted-path fields replaced, e.g.
+        ``{"strategy.name": "fedavg", "transport.codec": "quantize8",
+        "strategy.kwargs.use_prox": False}``.  Unknown paths raise
+        :class:`SpecError`; new keys may only be created under
+        ``strategy.kwargs`` (an open dict by design)."""
+        d = self.to_dict()
+        for path, value in overrides.items():
+            parts = path.split(".")
+            cur: Any = d
+            for i, p in enumerate(parts[:-1]):
+                if not isinstance(cur, dict) or p not in cur:
+                    raise SpecError(
+                        f"unknown spec path {path!r}: no section "
+                        f"{'.'.join(parts[:i + 1])!r}; top-level sections: "
+                        f"{sorted(_SECTIONS)}")
+                cur = cur[p]
+            leaf = parts[-1]
+            open_dict = len(parts) >= 2 and parts[-2] == "kwargs"
+            if not isinstance(cur, dict) or (leaf not in cur
+                                             and not open_dict):
+                raise SpecError(
+                    f"unknown spec field {path!r}; valid fields under "
+                    f"{'.'.join(parts[:-1]) or 'the spec root'}: "
+                    f"{sorted(cur) if isinstance(cur, dict) else '<leaf>'}")
+            cur[leaf] = value
+        return ExperimentSpec.from_dict(d)
+
+    # -- bridges to the core layer --------------------------------------
+    def to_sim_config(self) -> SimConfig:
+        """Materialization recipe for :class:`~repro.core.simulation.
+        SimEnv` (the engine-owned knobs stay out: see env_dict)."""
+        return SimConfig(
+            task=self.data.task, n_clients=self.data.n_clients,
+            n_classes=self.data.n_classes,
+            classes_per_client=self.data.classes_per_client,
+            samples_per_client=self.data.samples_per_client,
+            image_hw=self.data.image_hw, n_features=self.data.n_features,
+            n_tiers=self.tiers.n_tiers,
+            clients_per_round=self.tiers.clients_per_round,
+            local_epochs=self.engine.local_epochs,
+            batch_size=self.engine.batch_size, lr=self.engine.lr,
+            prox_lambda=self.engine.prox_lambda,
+            n_unstable=self.tiers.n_unstable,
+            base_compute=self.tiers.base_compute, seed=self.data.seed,
+            partitioner=self.data.partitioner,
+            delay_bands=self.tiers.delay_bands,
+            dropout_window=self.tiers.dropout_window)
+
+    @classmethod
+    def from_sim_config(cls, sc: SimConfig) -> "ExperimentSpec":
+        """The inverse bridge: a truthful spec echo for runs driven through
+        an already-built environment (the legacy ``run_*`` shims)."""
+        return cls(
+            data=DataSpec(
+                task=sc.task, n_clients=sc.n_clients, n_classes=sc.n_classes,
+                partitioner=sc.partitioner,
+                classes_per_client=sc.classes_per_client,
+                samples_per_client=sc.samples_per_client,
+                image_hw=sc.image_hw, n_features=sc.n_features,
+                seed=sc.seed),
+            tiers=TierSpec(
+                n_tiers=sc.n_tiers, clients_per_round=sc.clients_per_round,
+                delay_bands=sc.delay_bands, base_compute=sc.base_compute,
+                n_unstable=sc.n_unstable,
+                dropout_window=sc.dropout_window),
+            engine=EngineSpec(
+                local_epochs=sc.local_epochs, batch_size=sc.batch_size,
+                lr=sc.lr, prox_lambda=sc.prox_lambda))

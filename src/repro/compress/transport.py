@@ -212,6 +212,11 @@ def register_codec(name: str, factory: Callable[..., Codec]) -> None:
     _REGISTRY[name] = factory
 
 
+def registered_codecs() -> List[str]:
+    """Registered codec family names (the api layer's validation surface)."""
+    return sorted(_REGISTRY)
+
+
 register_codec("none", lambda: NoneCodec())
 register_codec("polyline", lambda p=4: PolylineCodec(int(p)))
 register_codec("quantize", lambda b=8: QuantizeCodec(int(b)))

@@ -12,17 +12,17 @@
 All three share SimEnv (identical data, latencies, dropout schedule) and
 run uncompressed f32 links, as in the paper's Table 2.  Each is a strategy
 over the shared event loop (core/engine.py + core/strategies/); these
-wrappers keep the stable ``run_*(env, BaselineConfig)`` surface.
+wrappers keep the stable ``run_*(env, BaselineConfig)`` surface as thin
+shims over :class:`~repro.api.ExperimentSpec` (the declarative surface in
+:mod:`repro.api`), so the parity oracle exercises the spec-driven path.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Any, Dict
 
-from repro.core.engine import EngineConfig, Metrics, run_engine
+from repro.core.engine import EngineConfig, Metrics, run_engine  # noqa: F401
 from repro.core.simulation import SimEnv
-from repro.core.strategies.fedasync import FedAsyncStrategy
-from repro.core.strategies.fedavg import FedAvgStrategy
-from repro.core.strategies.tifl import TiFLStrategy
 
 
 @dataclasses.dataclass
@@ -35,20 +35,25 @@ class BaselineConfig:
     staleness_exp: float = 0.5
 
 
-def _engine_cfg(bc: BaselineConfig) -> EngineConfig:
-    return EngineConfig(total_updates=bc.total_updates,
-                        eval_every=bc.eval_every, seed=bc.seed)
+def _run(env: SimEnv, bc: BaselineConfig, name: str,
+         kwargs: Dict[str, Any]) -> Metrics:
+    from repro import api
+    spec = api.ExperimentSpec.from_sim_config(env.sc)
+    spec.strategy = api.StrategySpec(name, kwargs)
+    spec.engine.total_updates = bc.total_updates
+    spec.engine.eval_every = bc.eval_every
+    spec.engine.seed = bc.seed
+    return api.build(spec, env=env).run().metrics
 
 
 def run_fedavg(env: SimEnv, bc: BaselineConfig) -> Metrics:
-    return run_engine(env, FedAvgStrategy(), _engine_cfg(bc))
+    return _run(env, bc, "fedavg", {})
 
 
 def run_tifl(env: SimEnv, bc: BaselineConfig) -> Metrics:
-    return run_engine(env, TiFLStrategy(), _engine_cfg(bc))
+    return _run(env, bc, "tifl", {})
 
 
 def run_fedasync(env: SimEnv, bc: BaselineConfig) -> Metrics:
-    return run_engine(env, FedAsyncStrategy(alpha=bc.alpha,
-                                            staleness_exp=bc.staleness_exp),
-                      _engine_cfg(bc))
+    return _run(env, bc, "fedasync",
+                {"alpha": bc.alpha, "staleness_exp": bc.staleness_exp})

@@ -41,6 +41,12 @@ class EngineConfig:
     total_updates: int = 200   # T: global update budget
     eval_every: int = 10
     seed: int = 0
+    #: re-profile latencies + rebuild the tier map every N global updates
+    #: (0 = never).  Draws from the engine rng, so a run with re-tiering
+    #: is still fully determined by (strategy, SimEnv, EngineConfig).
+    retier_every: int = 0
+    #: multiplicative latency drift per re-profiling (tiering.drift_latencies)
+    retier_drift: float = 0.2
 
 
 class Outcome(enum.Enum):
@@ -120,10 +126,19 @@ class ServerStrategy(abc.ABC):
         """Hook after each periodic eval (e.g. re-measure the wire ratio)."""
 
 
-def run_engine(env: SimEnv, strategy: ServerStrategy,
-               cfg: EngineConfig) -> Metrics:
+def run_engine(env: SimEnv, strategy: ServerStrategy, cfg: EngineConfig,
+               on_record=None) -> Metrics:
     """The one event loop.  Timestamp-ordered server reactions (Figure 1's
-    timeline), a global update budget, and the shared eval cadence."""
+    timeline), a global update budget, and the shared eval cadence.
+
+    ``on_record(point: dict)`` streams each recorded eval point to the
+    caller (the api layer's ``Run.run(on_eval=...)``); the dict carries the
+    same fields :meth:`~repro.core.scheduler.Metrics.record` appends.
+
+    With ``cfg.retier_every > 0`` the environment's tier map is rebuilt
+    from drifted latencies every N committed updates; the original map is
+    restored on exit so shared/cached environments stay reproducible.
+    """
     ctx = EngineContext(
         q=EventQueue(),
         rng=np.random.default_rng(cfg.seed + strategy.seed_offset),
@@ -131,20 +146,31 @@ def run_engine(env: SimEnv, strategy: ServerStrategy,
     strategy.bind(env, cfg)
     strategy.bootstrap(env, ctx)
 
-    while ctx.t_global < cfg.total_updates and len(ctx.q):
-        now, actor = ctx.q.pop()
-        out = strategy.on_event(env, ctx, now, actor)
-        if out is Outcome.DISCARD:
-            continue
-        ctx.t_global += 1
-        if out is Outcome.SKIP_ROUND:
-            continue
-        if (ctx.t_global % cfg.eval_every == 0
-                or ctx.t_global == cfg.total_updates):
-            acc, var = env.evaluate(strategy.global_params())
-            strategy.on_eval(env, ctx)
-            ctx.metrics.record(now, ctx.t_global, acc, var,
-                               ctx.bytes_up, ctx.bytes_down)
+    tm0 = env.tm if cfg.retier_every else None
+    try:
+        while ctx.t_global < cfg.total_updates and len(ctx.q):
+            now, actor = ctx.q.pop()
+            out = strategy.on_event(env, ctx, now, actor)
+            if out is Outcome.DISCARD:
+                continue
+            ctx.t_global += 1
+            if (out is not Outcome.SKIP_ROUND
+                    and (ctx.t_global % cfg.eval_every == 0
+                         or ctx.t_global == cfg.total_updates)):
+                acc, var = env.evaluate(strategy.global_params())
+                strategy.on_eval(env, ctx)
+                ctx.metrics.record(now, ctx.t_global, acc, var,
+                                   ctx.bytes_up, ctx.bytes_down)
+                if on_record is not None:
+                    on_record({"time": now, "round": ctx.t_global,
+                               "acc": acc, "acc_var": var,
+                               "bytes_up": ctx.bytes_up,
+                               "bytes_down": ctx.bytes_down})
+            if cfg.retier_every and ctx.t_global % cfg.retier_every == 0:
+                env.retier(ctx.rng, cfg.retier_drift)
+    finally:
+        if tm0 is not None:
+            env.tm = tm0
     return ctx.metrics
 
 

@@ -129,12 +129,16 @@ class RoundExecutor:
     def _bump(self, key: tuple) -> None:
         self.trace_counts[key] = self.trace_counts.get(key, 0) + 1
 
-    def _fedat_step(self, codec, use_prox: bool):
-        if not codec.in_graph:
+    @staticmethod
+    def _check_in_graph(codec) -> None:
+        if codec is not None and not codec.in_graph:
             raise NotImplementedError(
                 f"codec {codec.name!r} declares in_graph=False; the fused "
                 "round step needs a jit-composable lossy() for both links "
                 "(all registered codecs are in-graph — see DESIGN.md §Perf)")
+
+    def _fedat_step(self, codec, use_prox: bool):
+        self._check_in_graph(codec)
         key = ("fedat", codec.name, use_prox)
         if key in self._steps:
             return self._steps[key]
@@ -157,32 +161,45 @@ class RoundExecutor:
         self._steps[key] = jax.jit(step, donate_argnums=_donate((0, 1)))
         return self._steps[key]
 
-    def _fedavg_step(self):
-        key = ("fedavg",)
+    def _fedavg_step(self, codec=None):
+        """``codec=None`` is the paper's raw-f32 baseline link and keeps the
+        seed step body (and its trace-count key) byte-for-byte; a codec adds
+        the same pinned lossy downlink/uplink stages the FedAT step uses."""
+        self._check_in_graph(codec)
+        key = ("fedavg",) if codec is None else ("fedavg", codec.name)
         if key in self._steps:
             return self._steps[key]
         update = self.env.update_fn_noprox_raw
 
         def step(w, ids, w_intra, keys):
             self._bump(key)
-            client_params, _ = update(w, self._gather(ids), keys)
+            w_in = w if codec is None else _pin(codec.lossy(w))
+            client_params, _ = update(w_in, self._gather(ids), keys)
+            if codec is not None:
+                client_params = _pin(codec.lossy(_pin(client_params)))
             return aggregation.weighted_average(_pin(client_params), w_intra)
 
         self._steps[key] = jax.jit(step, donate_argnums=_donate((0,)))
         return self._steps[key]
 
-    def _fedasync_step(self):
-        key = ("fedasync",)
+    def _fedasync_step(self, codec=None):
+        self._check_in_graph(codec)
+        key = ("fedasync",) if codec is None else ("fedasync", codec.name)
         if key in self._steps:
             return self._steps[key]
         update = self.env.update_fn_noprox_raw
 
         def step(w, cid, c_glob, c_loc, keys):
             self._bump(key)
-            client_params, _ = update(w, self._gather(cid), keys)
+            w_in = w if codec is None else _pin(codec.lossy(w))
+            client_params, _ = update(w_in, self._gather(cid), keys)
             client_w = _pin(jax.tree.map(lambda a: a[0], client_params))
+            if codec is not None:
+                client_w = _pin(codec.lossy(client_w))
             # pin both products: the eager oracle materializes them before
-            # the add, which XLA would otherwise contract into an FMA
+            # the add, which XLA would otherwise contract into an FMA.
+            # The staleness mix interpolates toward the server's own copy
+            # of w (downlink loss only affects what the client trained on).
             return jax.tree.map(
                 lambda g, l: (jax.lax.optimization_barrier(c_glob * g)
                               + jax.lax.optimization_barrier(c_loc * l)),
@@ -215,20 +232,23 @@ class RoundExecutor:
         return step(w_global, tier_models, np.int32(m), pid,
                     aggregation.client_weights_host(ns), cross_weights, keys)
 
-    def fedavg_round(self, w, ids: np.ndarray, seed: int):
-        """One synchronous FedAvg round over the sampled clients, fused."""
-        step = self._fedavg_step()
+    def fedavg_round(self, w, ids: np.ndarray, seed: int, *, codec=None):
+        """One synchronous FedAvg round over the sampled clients, fused.
+        ``codec=None`` = the paper's raw f32 links; a codec compresses both
+        links exactly as in the FedAT step."""
+        step = self._fedavg_step(codec)
         pid, ns = self._pad_ids(ids)
         keys = self._pad_keys(seed, len(ids))
         return step(w, pid, aggregation.client_weights_host(ns), keys)
 
-    def fedasync_round(self, w, client: int, a_eff: float, seed: int):
+    def fedasync_round(self, w, client: int, a_eff: float, seed: int, *,
+                       codec=None):
         """One asynchronous client update with staleness mix-in, fused.
 
         The interpolation coefficients are rounded to f32 host-side so the
         in-graph math matches the seed loop's eager ``(1-a)*g + a*l``.
         """
-        step = self._fedasync_step()
+        step = self._fedasync_step(codec)
         keys = jax.random.split(jax.random.PRNGKey(seed), 1)
         cid = np.asarray([client], np.int32)
         return step(w, cid, np.float32(1.0 - a_eff), np.float32(a_eff), keys)

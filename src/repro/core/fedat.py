@@ -3,9 +3,12 @@ asynchronous training with weighted aggregation (Eq. 3), proximal local
 objective (Eq. 5) and lossy uplink/downlink compression (§4.3).
 
 The event loop lives in :mod:`repro.core.engine`; the FedAT policy lives in
-:mod:`repro.core.strategies.fedat`.  This module keeps the stable
-``run_fedat(env, FedATConfig)`` surface plus the codec helpers the tests
-and benchmarks use.
+:mod:`repro.core.strategies.fedat`; the declarative user surface lives in
+:mod:`repro.api`.  This module keeps the stable ``run_fedat(env,
+FedATConfig)`` shim — a thin :class:`~repro.api.ExperimentSpec` wrapper, so
+the bitwise parity oracle (tests/test_engine_parity.py) exercises the same
+spec-driven path the api exposes — plus the codec helpers the tests and
+benchmarks use, routed through the transport registry.
 """
 from __future__ import annotations
 
@@ -13,9 +16,8 @@ import dataclasses
 from typing import Optional
 
 from repro.compress import transport
-from repro.core.engine import EngineConfig, Metrics, run_engine
+from repro.core.engine import EngineConfig, Metrics, run_engine  # noqa: F401
 from repro.core.simulation import SimEnv
-from repro.core.strategies.fedat import FedATStrategy
 
 
 @dataclasses.dataclass
@@ -31,24 +33,34 @@ class FedATConfig:
     codec: Optional[str] = None
 
 
+def _polyline_codec(precision: Optional[int]) -> transport.Codec:
+    """Resolve the paper's precision knob through the transport registry."""
+    return transport.get_codec(
+        "none" if precision is None else f"polyline:{precision}")
+
+
 def fake_polyline(params, precision: Optional[int]):
     """The codec's exact lossy step: round to `precision` decimals."""
-    if precision is None:
-        return params
-    return transport.PolylineCodec(precision).lossy(params)
+    return _polyline_codec(precision).lossy(params)
 
 
 def measure_ratio(params, precision: Optional[int]) -> float:
-    """Wire bytes / raw f32 bytes for the polyline codec (full model)."""
-    if precision is None:
-        return 1.0
-    return transport.PolylineCodec(precision).measure_ratio(params,
-                                                            max_elems=None)
+    """Wire bytes / raw f32 bytes for the polyline codec, on the same
+    size-capped sample the engine's byte accounting uses."""
+    return _polyline_codec(precision).measure_ratio(params)
 
 
 def run_fedat(env: SimEnv, fc: FedATConfig) -> Metrics:
-    strategy = FedATStrategy(precision=fc.precision, codec=fc.codec,
-                             weighted=fc.weighted, use_prox=fc.use_prox)
-    return run_engine(env, strategy,
-                      EngineConfig(total_updates=fc.total_updates,
-                                   eval_every=fc.eval_every, seed=fc.seed))
+    """Spec shim: the legacy surface over :func:`repro.api.build`."""
+    from repro import api
+    codec = fc.codec.name if isinstance(fc.codec, transport.Codec) \
+        else fc.codec
+    spec = api.ExperimentSpec.from_sim_config(env.sc)
+    spec.strategy = api.StrategySpec(
+        "fedat", {"precision": fc.precision, "weighted": fc.weighted,
+                  "use_prox": fc.use_prox})
+    spec.transport = api.TransportSpec(codec=codec)
+    spec.engine.total_updates = fc.total_updates
+    spec.engine.eval_every = fc.eval_every
+    spec.engine.seed = fc.seed
+    return api.build(spec, env=env).run().metrics

@@ -41,6 +41,12 @@ class SimConfig:
     n_unstable: int = 10
     base_compute: float = 1.0      # seconds per local round before delays
     seed: int = 0
+    #: "#class" (the paper's skew) or "dirichlet:<alpha>" (data/federated.py)
+    partitioner: str = "#class"
+    #: per-tier latency bands added on top of base_compute (paper §6.1)
+    delay_bands: Tuple[Tuple[float, float], ...] = PAPER_DELAY_BANDS
+    #: unstable clients drop permanently at uniform(*dropout_window)
+    dropout_window: Tuple[float, float] = (50.0, 400.0)
 
 
 class SimEnv:
@@ -52,25 +58,25 @@ class SimEnv:
             task=sc.task, n_clients=sc.n_clients, n_classes=sc.n_classes,
             classes_per_client=sc.classes_per_client,
             samples_per_client=sc.samples_per_client, image_hw=sc.image_hw,
-            n_features=sc.n_features, seed=sc.seed)
+            n_features=sc.n_features, seed=sc.seed,
+            partitioner=sc.partitioner)
         self.train = pad_stack(self.ds)
         self.test = self._stack_test()
 
         # latency profile -> tiers (paper: 5 delay bands on top of compute)
         base = np.full(sc.n_clients, sc.base_compute)
-        lat = tiering.profile_latencies(base, PAPER_DELAY_BANDS, rng)
+        lat = tiering.profile_latencies(base, sc.delay_bands, rng)
         self.tm = tiering.assign_tiers(lat, sc.n_tiers)
 
-        # 10 unstable clients drop permanently at a random time
+        # unstable clients drop permanently at a random time; the single
+        # source of truth is the per-client dropout instant (+inf = stable),
+        # so alive(now) is one array compare (dropout_time derives the old
+        # dict view for tests that still want it)
         self.dropout_ids = rng.choice(sc.n_clients, sc.n_unstable,
                                       replace=False)
-        self.dropout_time = {int(c): float(rng.uniform(50, 400))
-                             for c in self.dropout_ids}
-        # vectorized liveness: per-client dropout instant (+inf = stable),
-        # so alive(now) is one array compare instead of a dict loop
         self.dropout_at = np.full(sc.n_clients, np.inf)
-        for c, t in self.dropout_time.items():
-            self.dropout_at[c] = t
+        self.dropout_at[self.dropout_ids] = rng.uniform(
+            *sc.dropout_window, size=sc.n_unstable)
 
         # model + jitted client update / eval
         key = jax.random.PRNGKey(sc.seed)
@@ -130,8 +136,25 @@ class SimEnv:
             self._executor = RoundExecutor(self)
         return self._executor
 
+    @property
+    def dropout_time(self) -> Dict[int, float]:
+        """Dict view of the dropout schedule (derived from ``dropout_at``)."""
+        return {int(c): float(self.dropout_at[c]) for c in self.dropout_ids}
+
     def alive(self, now: float) -> np.ndarray:
         return self.dropout_at > now
+
+    def retier(self, rng: np.random.Generator, drift: float = 0.2) -> bool:
+        """Re-profile client latencies (multiplicative drift) and rebuild the
+        tier map (tiering.retier); returns True when any tier membership
+        changed.  The engine drives this via ``EngineConfig.retier_every``
+        and restores the original map at the end of the run so shared/cached
+        environments stay reproducible."""
+        new_lat = tiering.drift_latencies(self.tm.latencies, rng, drift)
+        old = self.tm
+        self.tm = tiering.retier(self.tm, new_lat)
+        return any(not np.array_equal(a, b)
+                   for a, b in zip(old.members, self.tm.members))
 
     def sample_clients(self, pool: np.ndarray, k: int,
                        rng: np.random.Generator) -> np.ndarray:

@@ -4,12 +4,18 @@ updates the server model independently with polynomial staleness weighting
 
 Event = (client id, server version at dispatch).  A dead client's event is
 discarded without rescheduling (its dropout is permanent).
+
+``codec=None`` (default) is the paper's raw-f32 baseline link, bitwise
+with the seed loop; a transport codec compresses both links like FedAT.
 """
 from __future__ import annotations
+
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.compress import transport
 from repro.core.engine import (EngineConfig, EngineContext, Outcome,
                                ServerStrategy)
 from repro.core.simulation import SimEnv
@@ -19,14 +25,22 @@ class FedAsyncStrategy(ServerStrategy):
     name = "fedasync"
     seed_offset = 37
 
-    def __init__(self, alpha: float = 0.6, staleness_exp: float = 0.5):
+    def __init__(self, alpha: float = 0.6, staleness_exp: float = 0.5,
+                 codec: Union[str, transport.Codec, None] = None,
+                 ratio_sample_elems: Optional[int]
+                 = transport.RATIO_SAMPLE_ELEMS):
         self.alpha = alpha
         self.staleness_exp = staleness_exp
+        self.codec = None if codec is None else transport.get_codec(codec)
+        self.ratio_sample_elems = ratio_sample_elems
 
     def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
         # copy: the fused step may donate this buffer (executor contract)
         self.w = jax.tree.map(jnp.array, env.params0)
         self.server_version = 0
+        self._ratio = (1.0 if self.codec is None else
+                       self.codec.measure_ratio(env.params0,
+                                                self.ratio_sample_elems))
 
     def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
         # every client trains continuously at its own pace
@@ -38,14 +52,15 @@ class FedAsyncStrategy(ServerStrategy):
         c, start_version = actor
         if not env.alive(now)[c]:
             return Outcome.DISCARD
-        ctx.bytes_down += env.model_bytes
+        ctx.bytes_down += env.model_bytes * self._ratio
         # polynomial staleness weighting (FedAsync); the train + staleness
         # mix-in runs as one fused jitted step (core/executor.py)
         staleness = self.server_version - start_version
         a_eff = self.alpha * (1.0 + staleness) ** (-self.staleness_exp)
         self.w = ctx.executor.fedasync_round(self.w, c, a_eff,
-                                             ctx.draw_seed())
-        ctx.bytes_up += env.model_bytes
+                                             ctx.draw_seed(),
+                                             codec=self.codec)
+        ctx.bytes_up += env.model_bytes * self._ratio
         self.server_version += 1
         ctx.q.push(float(env.tm.latencies[c]) * (1 + ctx.rng.uniform(0, 0.1)),
                    (c, self.server_version))
@@ -53,3 +68,8 @@ class FedAsyncStrategy(ServerStrategy):
 
     def global_params(self):
         return self.w
+
+    def on_eval(self, env: SimEnv, ctx: EngineContext) -> None:
+        if self.codec is not None:  # track the drifting wire ratio, sampled
+            self._ratio = self.codec.measure_ratio(self.w,
+                                                   self.ratio_sample_elems)

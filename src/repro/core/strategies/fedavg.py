@@ -1,5 +1,10 @@
-"""FedAvg as an engine strategy: synchronous global rounds over raw f32
-links — sample K clients globally, wait for the slowest (paper §6.1).
+"""FedAvg as an engine strategy: synchronous global rounds — sample K
+clients globally, wait for the slowest (paper §6.1).
+
+The paper's baseline runs raw f32 links (``codec=None``, the default, which
+keeps the seed trajectory bitwise); passing a transport codec compresses
+both links exactly like the FedAT step, opening the strategy x codec plane
+to the sweep API.
 
 A round is scheduled while handling the previous round's completion event
 (sampling against liveness at that simulated instant, like the seed loop's
@@ -7,10 +12,13 @@ round head), so the engine's queue always holds exactly one round event.
 """
 from __future__ import annotations
 
+from typing import Optional, Union
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress import transport
 from repro.core.engine import (EngineConfig, EngineContext, Outcome,
                                ServerStrategy)
 from repro.core.simulation import SimEnv
@@ -24,9 +32,18 @@ class FedAvgStrategy(ServerStrategy):
     #: overrides this to burn the round instead
     reschedule_on_empty = False
 
+    def __init__(self, codec: Union[str, transport.Codec, None] = None,
+                 ratio_sample_elems: Optional[int]
+                 = transport.RATIO_SAMPLE_ELEMS):
+        self.codec = None if codec is None else transport.get_codec(codec)
+        self.ratio_sample_elems = ratio_sample_elems
+
     def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
         # copy: the fused step may donate this buffer (executor contract)
         self.w = jax.tree.map(jnp.array, env.params0)
+        self._ratio = (1.0 if self.codec is None else
+                       self.codec.measure_ratio(env.params0,
+                                                self.ratio_sample_elems))
 
     def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
         self._schedule(env, ctx)
@@ -51,13 +68,19 @@ class FedAvgStrategy(ServerStrategy):
         if len(ids) == 0:
             self._schedule(env, ctx)
             return Outcome.SKIP_ROUND
-        ctx.bytes_down += len(ids) * env.model_bytes
+        ctx.bytes_down += len(ids) * env.model_bytes * self._ratio
         # fused round: gather resident data -> vmapped local train ->
         # sample-weighted FedAvg, one jitted call (core/executor.py)
-        self.w = ctx.executor.fedavg_round(self.w, ids, ctx.draw_seed())
-        ctx.bytes_up += len(ids) * env.model_bytes
+        self.w = ctx.executor.fedavg_round(self.w, ids, ctx.draw_seed(),
+                                           codec=self.codec)
+        ctx.bytes_up += len(ids) * env.model_bytes * self._ratio
         self._schedule(env, ctx)
         return Outcome.STEP
 
     def global_params(self):
         return self.w
+
+    def on_eval(self, env: SimEnv, ctx: EngineContext) -> None:
+        if self.codec is not None:  # track the drifting wire ratio, sampled
+            self._ratio = self.codec.measure_ratio(self.w,
+                                                   self.ratio_sample_elems)

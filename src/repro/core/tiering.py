@@ -64,6 +64,15 @@ def retier(tm: TierMap, new_latencies: Sequence[float]) -> TierMap:
     return assign_tiers(new_latencies, tm.n_tiers)
 
 
+def drift_latencies(latencies: Sequence[float], rng: np.random.Generator,
+                    drift: float = 0.2) -> np.ndarray:
+    """A re-profiling measurement: each client's speed drifts by a uniform
+    multiplicative factor in [1-drift, 1+drift] (clients near a tier
+    boundary migrate when fed back through :func:`retier`)."""
+    lat = np.asarray(latencies, np.float64)
+    return lat * (1.0 + rng.uniform(-drift, drift, size=len(lat)))
+
+
 def sample_round_latency(tm: TierMap, tier: int, client_ids: np.ndarray,
                          rng: np.random.Generator, jitter: float = 0.1
                          ) -> float:

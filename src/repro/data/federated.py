@@ -6,6 +6,8 @@ class-conditional datasets with the same *federated structure*:
 
   * ``#class`` partitioning — each client holds samples from exactly
     ``classes_per_client`` labels (the paper's 2/4/6/8-class splits),
+  * ``dirichlet:<alpha>`` partitioning — per-client label distributions
+    drawn from Dir(alpha); small alpha = heavy skew (Hsu et al. 2019),
   * unequal client sizes (log-normal), 80/20 train/test split per client,
   * "image" task: class-template + noise images (CNN-learnable),
   * "text" task: class-conditional sparse feature vectors (logreg-learnable).
@@ -48,6 +50,26 @@ def _class_templates(rng, n_classes, shape, scale=2.0):
     return rng.normal(0.0, scale, size=(n_classes,) + shape).astype(np.float32)
 
 
+def parse_partitioner(partitioner: str) -> Tuple[str, float]:
+    """``'#class'`` -> ("#class", 0) | ``'dirichlet:<alpha>'`` ->
+    ("dirichlet", alpha).  Raises ValueError with the accepted grammar."""
+    kind, _, arg = str(partitioner).partition(":")
+    if kind == "#class":
+        return "#class", 0.0
+    if kind == "dirichlet":
+        try:
+            alpha = float(arg) if arg else 0.5
+        except ValueError:
+            raise ValueError(
+                f"bad dirichlet concentration in partitioner "
+                f"{partitioner!r} (expected e.g. 'dirichlet:0.3')")
+        if not alpha > 0:
+            raise ValueError(f"dirichlet alpha must be > 0, got {alpha}")
+        return "dirichlet", alpha
+    raise ValueError(f"unknown partitioner {partitioner!r}; expected "
+                     f"'#class' or 'dirichlet:<alpha>'")
+
+
 def make_federated(
     task: str = "image",
     n_clients: int = 100,
@@ -58,21 +80,31 @@ def make_federated(
     n_features: int = 128,
     noise: float = 1.0,
     seed: int = 0,
+    partitioner: str = "#class",
 ) -> FederatedDataset:
-    """classes_per_client >= n_classes => i.i.d. (uniform over all classes)."""
+    """``#class``: classes_per_client >= n_classes => i.i.d. (uniform over
+    all classes).  ``dirichlet:<alpha>``: per-client class proportions drawn
+    from Dir(alpha); classes_per_client is ignored."""
+    kind, alpha = parse_partitioner(partitioner)
     rng = np.random.default_rng(seed)
     shape = (image_hw, image_hw, 3) if task == "image" else (n_features,)
     templates = _class_templates(rng, n_classes, shape)
 
     clients = []
     for c in range(n_clients):
-        if classes_per_client >= n_classes:
-            labels_pool = np.arange(n_classes)
+        if kind == "dirichlet":
+            p = rng.dirichlet(np.full(n_classes, alpha))
+            n = max(int(rng.lognormal(np.log(samples_per_client), 0.3)), 20)
+            y = rng.choice(n_classes, n, p=p).astype(np.int32)
         else:
-            labels_pool = rng.choice(n_classes, classes_per_client,
-                                     replace=False)
-        n = max(int(rng.lognormal(np.log(samples_per_client), 0.3)), 20)
-        y = rng.choice(labels_pool, n).astype(np.int32)
+            # the seed ``#class`` path: draw order must stay byte-identical
+            if classes_per_client >= n_classes:
+                labels_pool = np.arange(n_classes)
+            else:
+                labels_pool = rng.choice(n_classes, classes_per_client,
+                                         replace=False)
+            n = max(int(rng.lognormal(np.log(samples_per_client), 0.3)), 20)
+            y = rng.choice(labels_pool, n).astype(np.int32)
         x = templates[y] + rng.normal(0, noise, size=(n,) + shape).astype(
             np.float32)
         n_tr = int(0.8 * n)

@@ -1,0 +1,13 @@
+"""Simulation-experiment launcher: the declarative spec CLI under the
+launch namespace (``launch/train.py`` drives the datacenter-scale trainer;
+this drives the paper-scale FL simulation).
+
+    PYTHONPATH=src python -m repro.launch.sim --set strategy.name=fedat \
+        --sweep transport.codec=none,quantize8
+
+Delegates to :mod:`repro.api.cli`; see that module for the flag grammar.
+"""
+from repro.api.cli import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+"""Declarative ExperimentSpec API (repro/api/): serialization round-trip,
+registry error surfaces, spec-driven vs legacy-wrapper bitwise parity,
+re-tiering wiring, env caching, and the CLI sweep path."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import cli
+from repro.core.baselines import BaselineConfig, run_fedavg, run_fedasync, \
+    run_tifl
+from repro.core.fedat import FedATConfig, run_fedat
+from repro.core.simulation import SimEnv
+
+
+def _small_spec(**overrides):
+    """One tiny scenario shared by every test in this module so the env
+    cache materializes a single environment."""
+    spec = api.ExperimentSpec().with_overrides({
+        "data.n_clients": 12, "data.samples_per_client": 20,
+        "data.image_hw": 8, "tiers.n_tiers": 3,
+        "tiers.clients_per_round": 4, "tiers.n_unstable": 2,
+        "engine.local_epochs": 1, "engine.total_updates": 8,
+        "engine.eval_every": 4})
+    return spec.with_overrides(overrides) if overrides else spec
+
+
+# ---------------------------------------------------------------------------
+# serialization + provenance
+# ---------------------------------------------------------------------------
+
+def test_json_round_trip_golden():
+    spec = api.ExperimentSpec()
+    d = spec.to_dict()
+    back = api.ExperimentSpec.from_json(spec.to_json())
+    assert back.to_dict() == d
+    assert back == spec
+    assert back.hash() == spec.hash()
+    # golden hash: the canonical serialization of the default (paper) spec
+    # is part of the provenance contract — changing any default field,
+    # field name, or the canonicalization breaks attribution of archived
+    # bench results and must be deliberate (bump SPEC_VERSION).
+    assert d["spec_version"] == api.SPEC_VERSION == 1
+    assert spec.hash() == "e205d71532b8"
+
+
+def test_hash_tracks_content_not_formatting():
+    spec = _small_spec()
+    # same content through a JSON round trip -> same hash
+    assert api.ExperimentSpec.from_json(spec.to_json()).hash() == spec.hash()
+    # any field change -> different hash
+    assert spec.with_overrides({"engine.seed": 1}).hash() != spec.hash()
+    assert spec.with_overrides(
+        {"transport.codec": "quantize8"}).hash() != spec.hash()
+    # env hash ignores engine-plane knobs but tracks the scenario
+    assert spec.with_overrides(
+        {"engine.total_updates": 99}).env_hash() == spec.env_hash()
+    assert spec.with_overrides(
+        {"data.seed": 7}).env_hash() != spec.env_hash()
+
+
+# ---------------------------------------------------------------------------
+# actionable validation errors
+# ---------------------------------------------------------------------------
+
+def test_unknown_field_rejected_with_valid_list():
+    with pytest.raises(api.SpecError, match=r"n_cleints.*n_clients"):
+        api.ExperimentSpec.from_dict({"data": {"n_cleints": 3}})
+    with pytest.raises(api.SpecError, match=r"unknown section.*datas"):
+        api.ExperimentSpec.from_dict({"datas": {}})
+    with pytest.raises(api.SpecError, match=r"unknown spec field"):
+        _small_spec().with_overrides({"tiers.n_teirs": 3})
+
+
+def test_unknown_registry_names_list_whats_registered():
+    with pytest.raises(api.SpecError, match=r"fedsgd.*registered.*fedat"):
+        _small_spec(**{"strategy.name": "fedsgd"}).validate()
+    with pytest.raises(api.SpecError, match=r"zstd.*registered.*quantize"):
+        _small_spec(**{"transport.codec": "zstd"}).validate()
+    with pytest.raises(api.SpecError, match=r"partitioner.*dirichlet"):
+        _small_spec(**{"data.partitioner": "zipf"}).validate()
+    with pytest.raises(api.SpecError, match=r"does not accept.*accepted"):
+        _small_spec(**{"strategy.kwargs.bogus": 1}).validate()
+    with pytest.raises(api.SpecError, match=r"transport\.codec"):
+        _small_spec(**{"strategy.kwargs.codec": "none"}).validate()
+
+
+# ---------------------------------------------------------------------------
+# spec-driven runs == legacy wrappers, bitwise
+# ---------------------------------------------------------------------------
+
+def _assert_bitwise(m_spec, m_legacy):
+    assert m_spec.rounds == m_legacy.rounds
+    assert m_spec.times == m_legacy.times
+    assert m_spec.acc == m_legacy.acc
+    assert m_spec.acc_var == m_legacy.acc_var
+    assert m_spec.bytes_up == m_legacy.bytes_up
+    assert m_spec.bytes_down == m_legacy.bytes_down
+
+
+@pytest.fixture(scope="module")
+def legacy_env():
+    """An environment built outside the api cache, as seed-era callers do."""
+    return SimEnv(_small_spec().to_sim_config())
+
+
+def test_fedat_spec_matches_legacy_wrapper(legacy_env):
+    fc = FedATConfig(total_updates=8, eval_every=4)
+    m_legacy = run_fedat(legacy_env, fc)
+    m_spec = api.run_spec(_small_spec()).metrics
+    _assert_bitwise(m_spec, m_legacy)
+
+
+@pytest.mark.parametrize("name,kwargs", [
+    ("fedavg", {}),
+    ("tifl", {}),
+    ("fedasync", {"alpha": 0.6, "staleness_exp": 0.5}),
+])
+def test_baseline_spec_matches_legacy_wrapper(legacy_env, name, kwargs):
+    bc = BaselineConfig(total_updates=8, eval_every=4)
+    fn = {"fedavg": run_fedavg, "tifl": run_tifl,
+          "fedasync": run_fedasync}[name]
+    m_legacy = fn(legacy_env, bc)
+    spec = _small_spec(**{"strategy.name": name,
+                          "strategy.kwargs": kwargs})
+    m_spec = api.run_spec(spec).metrics
+    _assert_bitwise(m_spec, m_legacy)
+
+
+def test_spec_echo_is_truthful(legacy_env):
+    """The shim's Result-side spec reflects the env it actually ran on."""
+    spec = api.ExperimentSpec.from_sim_config(legacy_env.sc)
+    assert spec.data.n_clients == legacy_env.sc.n_clients
+    assert spec.to_sim_config() == legacy_env.sc
+
+
+# ---------------------------------------------------------------------------
+# env cache + run handle
+# ---------------------------------------------------------------------------
+
+def test_env_cache_shared_across_strategy_and_codec_plane():
+    e1 = api.get_env(_small_spec())
+    e2 = api.get_env(_small_spec(**{"strategy.name": "fedavg",
+                                    "transport.codec": "quantize8",
+                                    "engine.total_updates": 3}))
+    assert e1 is e2
+    e3 = api.get_env(_small_spec(**{"data.seed": 5}))
+    assert e3 is not e1
+
+
+def test_streaming_eval_callback():
+    points = []
+    res = api.run_spec(_small_spec(), on_eval=points.append)
+    assert len(points) == len(res.metrics.acc) >= 1
+    assert points[0]["acc"] == res.metrics.acc[0]
+    assert points[-1]["round"] == res.metrics.rounds[-1]
+
+
+# ---------------------------------------------------------------------------
+# re-tiering (tiers.retier_every wires core/tiering.retier into the loop)
+# ---------------------------------------------------------------------------
+
+def test_retier_every_changes_tier_membership():
+    run = api.build(_small_spec(**{"tiers.retier_every": 2,
+                                   "tiers.retier_drift": 0.5}))
+    env, tm0 = run.env, run.env.tm
+    changed = []
+    orig = SimEnv.retier
+    env.retier = lambda rng, drift=0.2: changed.append(
+        orig(env, rng, drift))
+    try:
+        res = run.run()
+    finally:
+        del env.retier
+    assert len(changed) >= 3          # fired every 2 of 8 updates
+    assert any(changed)               # membership actually moved
+    assert env.tm is tm0              # restored: cached env reproducible
+    # and the run is still a full, finite trajectory
+    assert np.isfinite(res.metrics.acc).all()
+
+
+def test_retier_runs_are_deterministic():
+    spec = _small_spec(**{"tiers.retier_every": 2})
+    m1 = api.run_spec(spec).metrics
+    m2 = api.run_spec(spec).metrics
+    assert m1.times == m2.times and m1.acc == m2.acc
+
+
+# ---------------------------------------------------------------------------
+# sweep + CLI (acceptance: 2x2 strategy x codec from one invocation)
+# ---------------------------------------------------------------------------
+
+def test_sweep_grid_tags_and_order():
+    results = api.sweep(
+        _small_spec(**{"engine.total_updates": 2, "engine.eval_every": 2}),
+        {"strategy.name": ["fedat", "fedavg"],
+         "transport.codec": ["none", "quantize8"]})
+    assert [r.tag for r in results] == [
+        "strategy.name=fedat,transport.codec=none",
+        "strategy.name=fedat,transport.codec=quantize8",
+        "strategy.name=fedavg,transport.codec=none",
+        "strategy.name=fedavg,transport.codec=quantize8"]
+    assert all(len(r.metrics.acc) >= 1 for r in results)
+    # compression bites on both strategies
+    assert results[1].metrics.bytes_up[-1] < results[0].metrics.bytes_up[-1]
+    assert results[3].metrics.bytes_up[-1] < results[2].metrics.bytes_up[-1]
+
+
+def test_sweep_validates_before_running():
+    with pytest.raises(api.SpecError):
+        api.sweep(_small_spec(), {"strategy.name": ["fedat", "fedsgd"]})
+    with pytest.raises(api.SpecError):
+        api.sweep(_small_spec(), {})
+
+
+def test_cli_2x2_sweep_single_invocation(tmp_path):
+    spec_path = tmp_path / "exp.json"
+    out_path = tmp_path / "results.json"
+    spec_path.write_text(_small_spec(
+        **{"engine.total_updates": 2, "engine.eval_every": 2}).to_json())
+    results = cli.main([
+        "--spec", str(spec_path),
+        "--sweep", "strategy.name=fedat,fedavg",
+        "--sweep", "transport.codec=none,quantize8",
+        "--out", str(out_path)])
+    assert len(results) == 4
+    doc = json.loads(out_path.read_text())
+    assert len(doc["runs"]) == 4
+    hashes = {r["spec_hash"] for r in doc["runs"]}
+    assert len(hashes) == 4           # four distinct attributable configs
+    for rec in doc["runs"]:
+        assert rec["trajectory"]["acc"]
+        assert api.ExperimentSpec.from_dict(rec["spec"]).hash() \
+            == rec["spec_hash"]
+
+
+def test_cli_set_overrides_and_spec_errors(tmp_path, capsys):
+    results = cli.main(["--set", "data.n_clients=12",
+                        "--set", "data.samples_per_client=20",
+                        "--set", "data.image_hw=8",
+                        "--set", "tiers.n_tiers=3",
+                        "--set", "tiers.clients_per_round=4",
+                        "--set", "tiers.n_unstable=2",
+                        "--set", "engine.local_epochs=1",
+                        "--set", "engine.total_updates=2",
+                        "--set", "engine.eval_every=2"])
+    assert len(results) == 1 and results[0].metrics.acc
+    with pytest.raises(SystemExit, match="spec error"):
+        cli.main(["--set", "strategy.name=fedsgd"])
+    with pytest.raises(SystemExit, match="PATH=VALUE"):
+        cli.main(["--set", "strategy.name"])
