@@ -3,10 +3,20 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench-engine smoke-example
+.PHONY: test bench-smoke bench-engine smoke-example docs check-docs
 
 test:
 	$(PY) -m pytest -x -q
+
+# regenerate the introspected ExperimentSpec reference (docs/SPEC.md)
+docs:
+	$(PY) scripts/gen_spec_docs.py
+
+# CI docs gate: docs/SPEC.md must match the dataclasses (no drift) and
+# every intra-repo markdown link must resolve
+check-docs:
+	$(PY) scripts/gen_spec_docs.py --check
+	$(PY) scripts/check_links.py
 
 # spec-API quickstart as an executable smoke test (CI runs this)
 smoke-example:
@@ -17,7 +27,10 @@ smoke-example:
 bench-smoke:
 	$(PY) -m benchmarks.run codec codec_e2e
 
-# engine hot-path throughput (events/sec per strategy) + machine-readable
-# JSON for cross-PR perf tracking
+# engine hot-path throughput (events/sec per strategy) + the scale axis:
+# the 512-client scaled scenario single-device and client-sharded on a
+# forced multi-device host mesh (subprocess) + machine-readable JSON for
+# cross-PR perf tracking
 bench-engine:
-	$(PY) -m benchmarks.run engine --json BENCH_engine.json
+	$(PY) -m benchmarks.run engine engine_scaled engine_sharded \
+	    --json BENCH_engine.json

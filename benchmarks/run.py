@@ -11,17 +11,31 @@ structured result carries the spec hash that produced it.
 
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run table1 fig5 kernels
-  PYTHONPATH=src python -m benchmarks.run engine --json BENCH_engine.json
+  PYTHONPATH=src python -m benchmarks.run engine engine_scaled \\
+      engine_sharded --json BENCH_engine.json
 
 ``--json PATH`` additionally writes the structured results of the
-``engine`` target (events/sec, per-event us, fused-step trace counts,
+``engine*`` targets (events/sec, per-event us, fused-step trace counts,
 per-strategy spec hashes) so the perf trajectory is machine-readable and
 attributable across PRs.
+
+Scale axis: ``engine_scaled`` measures the 512-client workload
+(``BENCH_SCALED_CLIENTS`` overrides, e.g. 2048) on the current device
+topology; ``engine_sharded`` re-runs it under a host mesh with a forced
+multi-device count in a subprocess (the device count is fixed at first
+jax init, so the sharded measurement needs its own process) and records
+the measured sharded events/sec next to the single-device number.
+``--devices N`` forces N host devices for this process (must come from a
+fresh process); ``--scaled-mesh NAME`` runs the scaled scenario under a
+named mesh (launch/mesh.py grammar) — both are what the subprocess uses.
 """
 from __future__ import annotations
 
 import json
+import os
+import subprocess
 import sys
+import tempfile
 import time
 from typing import Any, Dict, List
 
@@ -216,6 +230,95 @@ def engine():
                                for r in JSON_DOC["results"]}
 
 
+#: named mesh for the scaled scenario (set by --scaled-mesh; the
+#: engine_sharded subprocess passes "host")
+SCALED_MESH: List[str] = [None]
+
+
+def _scaled_spec(mesh=None):
+    """The scale-axis scenario: >= 512 clients, a larger per-round client
+    fan-out, reduced budget (the per-event cost is what's measured)."""
+    n = int(os.environ.get("BENCH_SCALED_CLIENTS", "512"))
+    mesh_spec = api.MeshSpec.from_name(mesh) if mesh else api.MeshSpec()
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_clients=n, classes_per_client=2,
+                          samples_per_client=40, image_hw=8, seed=8),
+        tiers=api.TierSpec(n_tiers=5, clients_per_round=32,
+                           n_unstable=n // 16),
+        strategy=api.StrategySpec(name="fedat"),
+        engine=api.EngineSpec(total_updates=12, eval_every=12,
+                              local_epochs=1),
+        mesh=mesh_spec)
+
+
+def engine_scaled():
+    """Scaled FedAT workload (512+ clients, clients_per_round=32) on the
+    current device topology — the measured max-workload point.  Under
+    ``--scaled-mesh host`` with forced devices this is the client-sharded
+    round step; on one device it is the single-device fused step."""
+    mesh = SCALED_MESH[0]
+    spec = _scaled_spec(mesh)
+    n_updates = spec.engine.total_updates
+    warm = spec.with_overrides({"engine.total_updates": 3})
+    api.build(warm).run()            # warm: compile the fused step once
+    run = api.build(spec)
+    t0 = time.perf_counter()
+    run.run()
+    dt = time.perf_counter() - t0
+    env = run.env
+    tag = f"scaled_{spec.data.n_clients}" + (f"_{mesh}" if mesh else "")
+    emit(f"engine/{tag}", dt / n_updates * 1e6,
+         f"events_per_sec={n_updates / dt:.2f};devices={len(jax.devices())}"
+         f";data_axis={env.data_axis}")
+    JSON_DOC["results"].append({
+        "strategy": "fedat", "scenario": tag,
+        "n_clients": spec.data.n_clients,
+        "clients_per_round": spec.tiers.clients_per_round,
+        "mesh": mesh or "single", "n_devices": len(jax.devices()),
+        "data_axis": env.data_axis,
+        "total_updates": n_updates,
+        "events_per_sec": round(n_updates / dt, 3),
+        "us_per_event": round(dt / n_updates * 1e6, 1),
+        "trace_counts": {"/".join(map(str, k)): v
+                         for k, v in env.executor().trace_counts.items()},
+        "spec_hash": spec.hash(),
+    })
+
+
+def engine_sharded():
+    """The scaled scenario under a multi-device host mesh, measured in a
+    subprocess with ``--xla_force_host_platform_device_count`` (the only
+    way to change the device count after jax initialized here).  Merges
+    the child's record into the JSON doc and emits the sharded-vs-single
+    throughput ratio when both measurements exist."""
+    n_dev = int(os.environ.get("BENCH_SHARD_DEVICES", "2"))
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "sharded.json")
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "engine_scaled",
+             "--devices", str(n_dev), "--scaled-mesh", "host",
+             "--json", out],
+            capture_output=True, text=True, timeout=1800,
+            env={**os.environ, "JAX_PLATFORMS": "cpu"})
+        if proc.returncode != 0:
+            emit("engine/sharded", 0.0, "error=subprocess_failed")
+            print(proc.stderr[-2000:], file=sys.stderr)
+            return
+        with open(out) as f:
+            child = json.load(f)
+    rec = child["results"][-1]
+    JSON_DOC["results"].append(rec)
+    single = [r for r in JSON_DOC["results"]
+              if r.get("scenario", "").startswith("scaled")
+              and r.get("mesh") == "single"]
+    rel = (rec["events_per_sec"] / single[-1]["events_per_sec"]
+           if single else float("nan"))
+    emit(f"engine/{rec['scenario']}_d{rec['n_devices']}",
+         rec["us_per_event"],
+         f"events_per_sec={rec['events_per_sec']:.2f}"
+         f";x_vs_single={rel:.2f}")
+
+
 def kernels():
     """Kernel microbenches (interpret mode: correctness-path timing only)."""
     from repro.kernels import ops
@@ -282,24 +385,39 @@ ALL = {
     "codec": codec,
     "codec_e2e": codec_e2e,
     "engine": engine,
+    "engine_scaled": engine_scaled,
+    "engine_sharded": engine_sharded,
     "kernels": kernels,
     "trainer": trainer,
 }
 
 
+def _pop_flag(argv: List[str], flag: str):
+    if flag not in argv:
+        return argv, None
+    i = argv.index(flag)
+    if i + 1 >= len(argv):
+        sys.exit(f"usage: benchmarks.run [targets...] {flag} VALUE")
+    return argv[:i] + argv[i + 2:], argv[i + 1]
+
+
 def main() -> None:
-    argv = sys.argv[1:]
-    json_path = None
-    if "--json" in argv:
-        i = argv.index("--json")
-        if i + 1 >= len(argv):
-            sys.exit("usage: benchmarks.run [targets...] --json PATH")
-        json_path = argv[i + 1]
-        argv = argv[:i] + argv[i + 2:]
-    which = argv or list(ALL)
-    if json_path and "engine" not in which:
-        sys.exit("--json records the engine target; add 'engine' to the "
-                 "requested targets")
+    argv, json_path = _pop_flag(sys.argv[1:], "--json")
+    argv, devices = _pop_flag(argv, "--devices")
+    argv, scaled_mesh = _pop_flag(argv, "--scaled-mesh")
+    if devices:
+        # must run before anything touches the backend: jax is imported
+        # above but stays uninitialized until the first device query
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={devices}").strip()
+    if scaled_mesh:
+        SCALED_MESH[0] = scaled_mesh
+    which = argv or [t for t in ALL if t != "engine_sharded"]
+    if json_path and not any(t.startswith("engine") for t in which):
+        sys.exit("--json records the engine targets; add 'engine' (or "
+                 "'engine_scaled'/'engine_sharded') to the requested "
+                 "targets")
     print("name,us_per_call,derived")
     for name in which:
         ALL[name]()

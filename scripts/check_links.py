@@ -1,0 +1,68 @@
+"""Fail on broken intra-repo markdown links.
+
+    python scripts/check_links.py [files...]      # default: all *.md
+
+Checks every ``[text](target)`` whose target is not an external URL
+(``http(s)://``, ``mailto:``) or a pure in-page anchor: the referenced
+file must exist relative to the markdown file (or the repo root as a
+fallback, matching how links read on GitHub from the root README).
+Anchors on intra-repo links are stripped — heading slugs are a rendering
+concern; file existence is the invariant CI can hold cheaply.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — excluding images' alt-text edge cases is unnecessary;
+#: image targets are checked the same way
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files() -> list:
+    out = []
+    for root, dirs, files in os.walk(REPO):
+        dirs[:] = [d for d in dirs if not d.startswith(".")
+                   and d != "__pycache__"]
+        out += [os.path.join(root, f) for f in files if f.endswith(".md")]
+    return sorted(out)
+
+
+def check_file(path: str) -> list:
+    errors = []
+    text = open(path, encoding="utf-8").read()
+    # ignore fenced code blocks: link-looking text in examples is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        cand = [os.path.normpath(os.path.join(os.path.dirname(path), rel)),
+                os.path.normpath(os.path.join(REPO, rel))]
+        if not any(os.path.exists(c) for c in cand):
+            errors.append(f"{os.path.relpath(path, REPO)}: broken link "
+                          f"-> {target}")
+    return errors
+
+
+def main() -> None:
+    files = [os.path.abspath(f) for f in sys.argv[1:]] or md_files()
+    errors = []
+    for f in files:
+        errors += check_file(f)
+    if errors:
+        print("\n".join(errors))
+        sys.exit(f"{len(errors)} broken intra-repo link(s)")
+    print(f"checked {len(files)} markdown file(s): all intra-repo links "
+          "resolve")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Generate docs/SPEC.md — the ExperimentSpec field reference — by
+introspecting the spec dataclasses, their validators, and the registries.
+
+    PYTHONPATH=src python scripts/gen_spec_docs.py [--check]
+
+The document is fully derived: field names/types/defaults come from
+``dataclasses.fields``, validation rules are the message literals lifted
+(via ast) out of each section's ``validate()``, and the registry values
+come from the live registries (strategies, transport codecs, partitioner
+grammar, mesh kinds).  CI regenerates and ``git diff --exit-code``s the
+result, so the reference cannot drift from the code (see Makefile
+``check-docs``).  ``--check`` exits 1 if the file on disk is stale.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import inspect
+import os
+import re
+import sys
+import textwrap
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "src"))
+
+from repro.api import spec as spec_mod                       # noqa: E402
+from repro.compress import transport                         # noqa: E402
+from repro.core import strategies                            # noqa: E402
+from repro.data import federated                             # noqa: E402
+from repro.launch import mesh as mesh_mod                    # noqa: E402
+
+OUT = os.path.join(REPO, "docs", "SPEC.md")
+
+
+# ---------------------------------------------------------------------------
+# field + validator introspection
+# ---------------------------------------------------------------------------
+
+def _default_repr(f: dataclasses.Field) -> str:
+    if f.default is not dataclasses.MISSING:
+        return repr(f.default)
+    if f.default_factory is not dataclasses.MISSING:  # type: ignore
+        return repr(f.default_factory())
+    return "—"
+
+
+def _fstring_text(node: ast.AST) -> str:
+    """Render a (possibly f-) string AST node as readable rule text with
+    ``{expr}`` placeholders for interpolated values."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    if isinstance(node, ast.JoinedStr):
+        parts = []
+        for v in node.values:
+            if isinstance(v, ast.Constant):
+                parts.append(str(v.value))
+            elif isinstance(v, ast.FormattedValue):
+                parts.append("{%s}" % ast.unparse(v.value))
+        return "".join(parts)
+    return ast.unparse(node)
+
+
+def _validation_rules(cls) -> list:
+    """Message literals from ``_require(cond, msg)`` and
+    ``raise SpecError(msg)`` inside ``cls.validate``."""
+    validate = getattr(cls, "validate", None)
+    if validate is None:
+        return []
+    tree = ast.parse(textwrap.dedent(inspect.getsource(validate)))
+    rules = []
+    for node in ast.walk(tree):
+        msg = None
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "_require" and len(node.args) == 2):
+            msg = node.args[1]
+        elif (isinstance(node, ast.Raise) and node.exc is not None
+              and isinstance(node.exc, ast.Call)
+              and ast.unparse(node.exc.func).endswith("SpecError")
+              and node.exc.args):
+            msg = node.exc.args[0]
+        if msg is not None:
+            text = " ".join(_fstring_text(msg).split())
+            rules.append(text)
+    return rules
+
+
+def _doc_summary(cls) -> str:
+    doc = inspect.getdoc(cls) or ""
+    return " ".join(doc.split("\n\n")[0].split())
+
+
+def _field_note(cls, name: str) -> str:
+    """The ``#:`` comment right above a field, or the inline comment on
+    its line — the same conventions the source uses."""
+    lines = inspect.getsource(cls).splitlines()
+    note: list = []
+    for line in lines:
+        s = line.strip()
+        if s.startswith("#:"):
+            note.append(s[2:].strip())
+        elif s.startswith(f"{name}:") or s.startswith(f"{name} "):
+            # a trailing comment is separated from code by 2+ spaces,
+            # which a '#' inside a string default never is
+            m = re.search(r"\s{2,}#\s*(.+)$", line)
+            if m:
+                return m.group(1).strip()
+            return " ".join(note)
+        elif not s.startswith("#"):
+            note = []
+    return ""
+
+
+def section_md(name: str, cls) -> str:
+    out = [f"## `{name}` — {cls.__name__}", "", _doc_summary(cls), ""]
+    out += ["| field | type | default | notes |",
+            "|-------|------|---------|-------|"]
+    for f in dataclasses.fields(cls):
+        ftype = f.type if isinstance(f.type, str) else getattr(
+            f.type, "__name__", str(f.type))
+        note = _field_note(cls, f.name).replace("|", "\\|")
+        out.append(f"| `{f.name}` | `{ftype}` | `{_default_repr(f)}` "
+                   f"| {note} |")
+    rules = _validation_rules(cls)
+    if rules:
+        out += ["", "Validation (each failure raises `SpecError` with "
+                    "this message):", ""]
+        out += [f"- {r}" for r in rules]
+    out.append("")
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+def registries_md() -> str:
+    out = ["## Registries", "",
+           "The open extension points the spec's string fields resolve "
+           "through.", "",
+           "### Strategies (`strategy.name`)", "",
+           "Registered in `core/strategies/STRATEGIES`; "
+           "`strategy.kwargs` is checked against the constructor "
+           "signature.", ""]
+    for name in sorted(strategies.STRATEGIES):
+        factory = strategies.STRATEGIES[name]
+        sig = ", ".join(p for p in inspect.signature(factory).parameters)
+        out.append(f"- `{name}` — kwargs: `{sig or '(none)'}`")
+    out += ["", "### Transport codecs (`transport.codec`)", "",
+            "Registered via `compress/transport.register_codec`; "
+            "`null` keeps each strategy's paper default link.", ""]
+    for name in transport.registered_codecs():
+        out.append(f"- `{name}`")
+    out += ["", "### Partitioners (`data.partitioner`)", "",
+            " ".join((inspect.getdoc(federated.parse_partitioner) or "")
+                     .split()), "",
+            "### Mesh kinds (`mesh.kind`)", ""]
+    for kind in mesh_mod.MESH_KINDS:
+        d = mesh_mod.STATIC_DATA_AXIS.get(kind)
+        axis = (f"data axis {d}" if d else
+                "data axis = local device count / n_pods")
+        out.append(f"- `{kind}` — {axis}")
+    out.append("")
+    return "\n".join(out)
+
+
+def build() -> str:
+    head = [
+        "<!-- GENERATED by scripts/gen_spec_docs.py — do not edit; "
+        "run `make docs`. -->",
+        "",
+        "# ExperimentSpec reference",
+        "",
+        " ".join((inspect.getdoc(spec_mod) or "").split("\n\n")[0]
+                 .split()),
+        "",
+        f"Spec version: **{spec_mod.SPEC_VERSION}** (readable: "
+        f"{list(spec_mod._READABLE_VERSIONS)}).  Serialization is strict "
+        "JSON via `to_dict`/`from_dict`; `spec.hash()` (sha256 of the "
+        "canonical JSON, 12 hex chars) stamps every result for "
+        "provenance.  See `DESIGN.md` §API for the architecture and "
+        "`README.md` for the quickstart.",
+        "",
+    ]
+    body = [section_md(name, cls)
+            for name, cls in spec_mod._SECTIONS.items()]
+    return "\n".join(head + body + [registries_md()])
+
+
+def main() -> None:
+    doc = build()
+    if "--check" in sys.argv:
+        on_disk = open(OUT).read() if os.path.exists(OUT) else ""
+        if on_disk != doc:
+            sys.exit(f"{OUT} is stale; run `make docs` and commit the "
+                     "result")
+        print(f"{OUT} is up to date")
+        return
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        f.write(doc)
+    print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,7 +6,8 @@
         data=api.DataSpec(n_clients=40, partitioner="dirichlet:0.3"),
         strategy=api.StrategySpec("fedat", {"use_prox": True}),
         transport=api.TransportSpec(codec="quantize8"),
-        engine=api.EngineSpec(total_updates=120))
+        engine=api.EngineSpec(total_updates=120),
+        mesh=api.MeshSpec(kind="host"))   # client-shard over local devices
     result = api.build(spec).run()
 
     api.sweep(spec, {"strategy.name": ["fedat", "fedavg"],
@@ -18,5 +19,5 @@ CLI: ``python -m repro.api.cli --spec exp.json --set strategy.name=fedat
 from repro.api.build import (Result, Run, build, clear_env_cache,  # noqa: F401
                              get_env, run_spec, sweep)
 from repro.api.spec import (SPEC_VERSION, DataSpec, EngineSpec,  # noqa: F401
-                            ExperimentSpec, SpecError, StrategySpec,
-                            TierSpec, TransportSpec)
+                            ExperimentSpec, MeshSpec, SpecError,
+                            StrategySpec, TierSpec, TransportSpec)

@@ -34,10 +34,19 @@ def clear_env_cache() -> None:
 
 
 def get_env(spec: ExperimentSpec) -> SimEnv:
-    """The cached environment for a spec's (data, tiers, local) section."""
+    """The cached environment for a spec's (data, tiers, local, mesh)
+    section.  Build-time configuration errors (e.g. a 'host' mesh whose
+    runtime data-axis size does not divide ``clients_per_round`` — only
+    knowable once the device count is) surface as :class:`SpecError`."""
     key = spec.env_hash()
     if key not in _ENV_CACHE:
-        _ENV_CACHE[key] = SimEnv(spec.to_sim_config())
+        try:
+            _ENV_CACHE[key] = SimEnv(spec.to_sim_config())
+        except ValueError as e:
+            # chained: a ValueError here is a build-time configuration
+            # problem (mesh divisibility, device count), but keep the
+            # original traceback in case something deeper raised it
+            raise SpecError(str(e)) from e
     return _ENV_CACHE[key]
 
 

@@ -15,6 +15,13 @@ adds a grid axis.  Values parse as JSON when possible (``null`` -> None,
 ``false`` -> False, numbers), else as strings.  ``--out`` writes one
 record per run: tag, spec hash, full spec echo, summary, and the eval
 trajectory — enough to reproduce or re-plot any run.
+
+Client-sharded execution: ``--set mesh.kind=host`` runs the fused round
+step sharded over however many local devices exist (force N CPU devices
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
+launching; jax reads it at first init).  ``tiers.clients_per_round`` must
+be a multiple of the mesh's data-axis size — validation says so with the
+nearest valid value.  See docs/SPEC.md for the full field reference.
 """
 from __future__ import annotations
 

@@ -9,6 +9,7 @@ server policy — from five nested sections:
   * :class:`StrategySpec`  server policy by registry name + kwargs
   * :class:`TransportSpec` the link codec by registry string
   * :class:`EngineSpec`    budget, eval cadence, seed, local-training knobs
+  * :class:`MeshSpec`      device mesh for the client-sharded round step
 
 The spec is plain data: ``to_dict``/``from_dict`` round-trip through JSON
 (``from_dict`` rejects unknown fields with the valid-field list), and
@@ -32,7 +33,13 @@ from typing import Any, Dict, Optional, Tuple
 from repro.compress import transport
 from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 
-SPEC_VERSION = 1
+#: Version 2 added the ``mesh`` section (client-sharded round executor).
+#: Version-1 documents (no ``mesh`` key) still parse — they get the
+#: single-device default — but serialization always emits the current
+#: version, so hashes of re-serialized v1 specs change (deliberately:
+#: the mesh is now part of what a result is attributable to).
+SPEC_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 
 class SpecError(ValueError):
@@ -207,12 +214,81 @@ class EngineSpec:
                  "engine.local_epochs and engine.batch_size must be >= 1")
 
 
+@dataclasses.dataclass
+class MeshSpec:
+    """Device mesh for the fused round step (DESIGN.md §Scale-mapping).
+
+    ``kind`` selects the mesh family (:mod:`repro.launch.mesh`):
+
+    * ``"single"`` — no mesh; the executor builds the byte-identical
+      single-device steps (the default, and the bitwise-parity anchor).
+    * ``"host"`` — a mesh over however many devices the host has (force N
+      with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before
+      jax initializes); ``n_pods > 1`` adds the pod (tier) axis.
+    * ``"production"`` — the 256/512-chip datacenter shapes (data axis 16;
+      ``n_pods=2`` adds the pod axis).
+
+    With a data axis of size D > 1 the per-round client stack is sharded
+    over it, which requires ``tiers.clients_per_round % D == 0`` — checked
+    statically here when D is known (``single``/``production``), at
+    environment build time for ``host`` (D depends on the runtime device
+    count).  ``shard_tiers`` additionally maps the (M, ...) tier-model
+    stack onto the pod axis.
+    """
+    kind: str = "single"                 # single | host | production
+    n_pods: int = 1
+    shard_tiers: bool = False
+
+    def to_name(self) -> Optional[str]:
+        """The :func:`repro.launch.mesh.resolve_mesh` name (None=single)."""
+        if self.kind == "single":
+            return None
+        return self.kind if self.n_pods == 1 else f"{self.kind}:{self.n_pods}"
+
+    @classmethod
+    def from_name(cls, name: Optional[str],
+                  shard_tiers: bool = False) -> "MeshSpec":
+        from repro.launch import mesh as mesh_mod
+        kind, n_pods = mesh_mod.parse_mesh_name(name)
+        return cls(kind=kind, n_pods=n_pods, shard_tiers=shard_tiers)
+
+    def validate(self, clients_per_round: int) -> None:
+        from repro.launch import mesh as mesh_mod
+        _require(self.kind in mesh_mod.MESH_KINDS,
+                 f"mesh.kind must be one of {mesh_mod.MESH_KINDS}, "
+                 f"got {self.kind!r}")
+        _require(self.n_pods >= 1,
+                 f"mesh.n_pods must be >= 1, got {self.n_pods}")
+        if self.kind == "single":
+            _require(self.n_pods == 1,
+                     "mesh.n_pods > 1 needs mesh.kind 'host' or "
+                     "'production' (a single device has no pod axis)")
+        if self.kind == "production":
+            _require(self.n_pods in (1, 2),
+                     f"production mesh has 1 or 2 pods, "
+                     f"got mesh.n_pods={self.n_pods}")
+        if self.shard_tiers:
+            _require(self.n_pods > 1,
+                     "mesh.shard_tiers maps tiers onto the pod axis and "
+                     "needs mesh.n_pods > 1")
+        d = mesh_mod.STATIC_DATA_AXIS.get(self.kind)
+        if d and clients_per_round % d:
+            k = clients_per_round
+            raise SpecError(
+                f"tiers.clients_per_round={k} does not pad to a multiple "
+                f"of the {self.kind} mesh data axis (size {d}); use a "
+                f"multiple of {d} (e.g. {((k + d - 1) // d) * d}).  For "
+                f"'host' meshes this is checked at build time against the "
+                f"actual device count.")
+
+
 # ---------------------------------------------------------------------------
 # the composed spec
 # ---------------------------------------------------------------------------
 
 _SECTIONS = {"data": DataSpec, "tiers": TierSpec, "strategy": StrategySpec,
-             "transport": TransportSpec, "engine": EngineSpec}
+             "transport": TransportSpec, "engine": EngineSpec,
+             "mesh": MeshSpec}
 
 
 @dataclasses.dataclass
@@ -223,6 +299,7 @@ class ExperimentSpec:
     transport: TransportSpec = dataclasses.field(
         default_factory=TransportSpec)
     engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
+    mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
 
     # -- validation -----------------------------------------------------
     def validate(self) -> "ExperimentSpec":
@@ -231,6 +308,7 @@ class ExperimentSpec:
         self.strategy.validate()
         self.transport.validate()
         self.engine.validate()
+        self.mesh.validate(self.tiers.clients_per_round)
         return self
 
     # -- serialization --------------------------------------------------
@@ -246,9 +324,10 @@ class ExperimentSpec:
     def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
         d = dict(d)
         version = d.pop("spec_version", SPEC_VERSION)
-        if version != SPEC_VERSION:
+        if version not in _READABLE_VERSIONS:
             raise SpecError(f"spec_version {version} not supported "
-                            f"(this build reads version {SPEC_VERSION})")
+                            f"(this build reads {_READABLE_VERSIONS} and "
+                            f"writes {SPEC_VERSION})")
         unknown = sorted(set(d) - set(_SECTIONS))
         if unknown:
             raise SpecError(f"unknown section(s) {unknown} in experiment "
@@ -291,7 +370,8 @@ class ExperimentSpec:
         eng = d["engine"]
         local = {k: eng[k] for k in ("local_epochs", "batch_size", "lr",
                                      "prox_lambda")}
-        return {"data": d["data"], "tiers": tiers, "local": local}
+        return {"data": d["data"], "tiers": tiers, "local": local,
+                "mesh": d["mesh"]}
 
     def env_hash(self) -> str:
         return hashlib.sha256(json.dumps(
@@ -346,7 +426,8 @@ class ExperimentSpec:
             base_compute=self.tiers.base_compute, seed=self.data.seed,
             partitioner=self.data.partitioner,
             delay_bands=self.tiers.delay_bands,
-            dropout_window=self.tiers.dropout_window)
+            dropout_window=self.tiers.dropout_window,
+            mesh=self.mesh.to_name(), shard_tiers=self.mesh.shard_tiers)
 
     @classmethod
     def from_sim_config(cls, sc: SimConfig) -> "ExperimentSpec":
@@ -367,4 +448,5 @@ class ExperimentSpec:
                 dropout_window=sc.dropout_window),
             engine=EngineSpec(
                 local_epochs=sc.local_epochs, batch_size=sc.batch_size,
-                lr=sc.lr, prox_lambda=sc.prox_lambda))
+                lr=sc.lr, prox_lambda=sc.prox_lambda),
+            mesh=MeshSpec.from_name(sc.mesh, shard_tiers=sc.shard_tiers))

@@ -74,7 +74,11 @@ class EngineContext:
     that strategies parameterize (prox on/off, codec, aggregation
     weights).  It replaces the old per-event ``local_train`` leg — the
     whole downlink → train → uplink → aggregate pipeline now runs as one
-    jitted call over resident data (DESIGN.md §Perf).
+    jitted call over resident data (DESIGN.md §Perf).  The environment's
+    mesh (``SimConfig.mesh``, selected via the spec's ``mesh`` section)
+    decides whether that call is single-device or client-sharded over the
+    mesh's data axis (DESIGN.md §Scale-mapping); the loop itself is
+    mesh-agnostic.
 
     ``draw_seed`` is the one host rng draw per training event; its
     position in event order is the parity contract with the seed loops.

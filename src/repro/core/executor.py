@@ -41,6 +41,27 @@ Trace accounting: every fused step bumps ``trace_counts[step_key]`` at
 trace time (a Python side effect inside the jitted function body), which
 is what ``tests/test_round_executor.py`` uses to assert zero shape-driven
 retraces across a dropout-laden run.
+
+**Client sharding on a device mesh** (DESIGN.md §Scale-mapping).  When the
+environment carries a mesh whose ``data`` axis has size D > 1, the
+per-round client stack is split over that axis: the vmapped local train +
+pinned uplink ``lossy`` + partial Eq. 4 weighted sum run under
+``shard_map`` (each device trains K/D clients), and one ``psum`` over
+``data`` completes the tier model.  Everything outside that leg — the
+downlink ``lossy`` on the replicated global model, the in-graph gather
+over the (client-sharded) resident train stacks, the tier-slot scatter,
+and the Eq. 3 cross-tier average — stays in the auto-sharded (GSPMD)
+region of the same jitted program.  ``clients_per_round`` must be a
+multiple of D (checked at :class:`~repro.core.simulation.SimEnv` build).
+
+Parity contract across the mesh dimension: with D == 1 (no mesh, or a
+one-device host mesh) the executor builds the *exact* single-device steps
+— same trace keys, bitwise-identical trajectories.  With D > 1 the steps
+get distinct trace keys (``(..., "dataD")``) and match the single-device
+trajectory within a pinned numerical tolerance only: the psum
+re-associates the Eq. 4 sum and XLA schedules the shard-local vmap
+differently, and blockwise codecs (``quantize8/16``) group their blocks
+shard-locally.  ``tests/test_mesh_executor.py`` pins both sides.
 """
 from __future__ import annotations
 
@@ -49,8 +70,11 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation
+from repro.runtime import sharding as shd
 
 
 def _donate(argnums: Tuple[int, ...]) -> Tuple[int, ...]:
@@ -80,11 +104,30 @@ class RoundExecutor:
     One executor is cached per :class:`~repro.core.simulation.SimEnv`
     (``env.executor()``) so repeated engine runs over the same environment
     reuse the compile cache.
+
+    The environment's mesh decides the execution shape: with a ``data``
+    axis of size D > 1 the per-round client stack runs client-sharded
+    under ``shard_map`` (one compiled step per configuration *and* mesh,
+    keyed ``(..., "dataD")``); with D == 1 the byte-identical
+    single-device steps are built, so a one-device host mesh reproduces
+    the no-mesh trajectory bitwise.
     """
 
     def __init__(self, env):
         self.env = env
         self.K = int(env.sc.clients_per_round)
+        #: device mesh (None = single device) and its data-axis size D;
+        #: D > 1 selects the shard_map round steps (distinct trace keys),
+        #: D == 1 keeps the single-device steps byte-for-byte.
+        self.mesh = getattr(env, "mesh", None)
+        self.D = int(getattr(env, "data_axis", 1))
+        assert self.K % max(self.D, 1) == 0, "SimEnv validates divisibility"
+        #: shard the (M, ...) tier-model stack over the mesh's pod axis
+        #: (the TiFL/FedAT tier axis); a no-op without a multi-pod mesh.
+        #: sized from this env's own mesh only, never the ambient one.
+        self.shard_tiers = bool(getattr(env.sc, "shard_tiers", False)) \
+            and self.mesh is not None \
+            and self.mesh.shape.get("pod", 1) > 1
         self._steps: Dict[tuple, Any] = {}
         #: step key -> number of times the step body was traced; a fixed-
         #: shape step traces exactly once per configuration.
@@ -137,7 +180,97 @@ class RoundExecutor:
                 "round step needs a jit-composable lossy() for both links "
                 "(all registered codecs are in-graph — see DESIGN.md §Perf)")
 
+    # -- client-sharded leg (mesh data axis, D > 1) ---------------------
+    def _train_psum(self, update, lossy):
+        """The shard_map'd leg of a sharded round: vmapped local train over
+        the K/D shard-local clients, pinned uplink ``lossy``, partial Eq. 4
+        weighted sum (same barrier-on-product rounding as
+        :func:`~repro.core.aggregation.weighted_average`), then one
+        ``psum`` over ``data`` completes the weighted tier average.
+
+        ``w_intra`` arrives already normalized (host-side, exactly as in
+        the single-device step), so the psum of shard-partial sums *is*
+        the full weighted average; padded zero-weight slots stay exactly
+        neutral on whichever shard they land.
+        """
+        def body(w_sent, batch, keys, w_intra):
+            client_params, _ = update(w_sent, batch, keys)
+            client_params = (_pin(lossy(_pin(client_params)))
+                             if lossy is not None else _pin(client_params))
+
+            def part(leaf):
+                w = w_intra.reshape(
+                    (-1,) + (1,) * (leaf.ndim - 1)).astype(jnp.float32)
+                prod = jax.lax.optimization_barrier(
+                    leaf.astype(jnp.float32) * w)
+                return jnp.sum(prod, axis=0)
+
+            sums = jax.tree.map(part, client_params)
+            return jax.tree.map(lambda x: jax.lax.psum(x, "data"), sums)
+
+        # clients split over "data"; unmentioned mesh axes (model, pod)
+        # see replicated inputs, so the P() outputs are replicated too
+        # (check_rep can't prove that through the psum, hence False).
+        return shard_map(body, self.mesh,
+                         in_specs=(P(), P("data"), P("data"), P("data")),
+                         out_specs=P(), check_rep=False)
+
+    def _tier_place(self, tier_models):
+        """Optionally pin the (M, ...) tier stack to the pod (tier) axis
+        (logical axis "tiers" -> physical "pod", runtime/sharding.py)."""
+        if not self.shard_tiers:
+            return tier_models
+        return jax.tree.map(
+            lambda leaf: jax.lax.with_sharding_constraint(
+                leaf, shd.logical_sharding(
+                    ("tiers",) + (None,) * (leaf.ndim - 1), self.mesh)),
+            tier_models)
+
+    def _fedat_step_sharded(self, codec, use_prox: bool):
+        self._check_in_graph(codec)
+        key = ("fedat", codec.name, use_prox, f"data{self.D}")
+        if key in self._steps:
+            return self._steps[key]
+        env = self.env
+        update = env.update_fn_raw if use_prox else env.update_fn_noprox_raw
+        train = self._train_psum(update, codec.lossy)
+        lossy = codec.lossy
+
+        def step(w_global, tier_models, m, ids, w_intra, w_cross, keys):
+            self._bump(key)
+            w_sent = _pin(lossy(w_global))
+            tier_model = _pin(
+                train(w_sent, self._gather(ids), keys, w_intra))
+            tier_models = self._tier_place(jax.tree.map(
+                lambda s, nw: s.at[m].set(nw), tier_models, tier_model))
+            w_global = aggregation.weighted_average(tier_models, w_cross)
+            return w_global, tier_models
+
+        self._steps[key] = jax.jit(step, donate_argnums=_donate((0, 1)))
+        return self._steps[key]
+
+    def _fedavg_step_sharded(self, codec=None):
+        self._check_in_graph(codec)
+        key = (("fedavg",) if codec is None else ("fedavg", codec.name)) \
+            + (f"data{self.D}",)
+        if key in self._steps:
+            return self._steps[key]
+        update = self.env.update_fn_noprox_raw
+        train = self._train_psum(update, None if codec is None
+                                 else codec.lossy)
+
+        def step(w, ids, w_intra, keys):
+            self._bump(key)
+            w_in = w if codec is None else _pin(codec.lossy(w))
+            return train(w_in, self._gather(ids), keys, w_intra)
+
+        self._steps[key] = jax.jit(step, donate_argnums=_donate((0,)))
+        return self._steps[key]
+
+    # -- single-device steps (and the D == 1 path under any mesh) -------
     def _fedat_step(self, codec, use_prox: bool):
+        if self.D > 1:
+            return self._fedat_step_sharded(codec, use_prox)
         self._check_in_graph(codec)
         key = ("fedat", codec.name, use_prox)
         if key in self._steps:
@@ -165,6 +298,8 @@ class RoundExecutor:
         """``codec=None`` is the paper's raw-f32 baseline link and keeps the
         seed step body (and its trace-count key) byte-for-byte; a codec adds
         the same pinned lossy downlink/uplink stages the FedAT step uses."""
+        if self.D > 1:
+            return self._fedavg_step_sharded(codec)
         self._check_in_graph(codec)
         key = ("fedavg",) if codec is None else ("fedavg", codec.name)
         if key in self._steps:
@@ -183,6 +318,9 @@ class RoundExecutor:
         return self._steps[key]
 
     def _fedasync_step(self, codec=None):
+        """FedAsync trains one client per event, so there is no client
+        fan-out to shard: this step is identical under any mesh (the model
+        math itself still lands in the auto-sharded GSPMD region)."""
         self._check_in_graph(codec)
         key = ("fedasync",) if codec is None else ("fedasync", codec.name)
         if key in self._steps:
@@ -224,7 +362,10 @@ class RoundExecutor:
         Donation contract: the server-state arguments (``w_global``,
         ``tier_models``) may be donated on TPU/GPU — callers must pass
         buffers they own (strategies copy ``env.params0`` at bind time)
-        and replace their references with the returned values.
+        and replace their references with the returned values.  The same
+        contract holds for the sharded step: shard_map does not change
+        which arguments are donated, only how the client fan-out is laid
+        out across the mesh.
         """
         step = self._fedat_step(codec, use_prox)
         pid, ns = self._pad_ids(ids)
@@ -235,7 +376,9 @@ class RoundExecutor:
     def fedavg_round(self, w, ids: np.ndarray, seed: int, *, codec=None):
         """One synchronous FedAvg round over the sampled clients, fused.
         ``codec=None`` = the paper's raw f32 links; a codec compresses both
-        links exactly as in the FedAT step."""
+        links exactly as in the FedAT step.  Client-shards over the mesh
+        data axis exactly like :meth:`fedat_round` (TiFL rounds run
+        through here too)."""
         step = self._fedavg_step(codec)
         pid, ns = self._pad_ids(ids)
         keys = self._pad_keys(seed, len(ids))

@@ -4,6 +4,11 @@
 five delay bands; 10 "unstable" clients that drop out permanently at a
 random time; fixed seeds so every method sees identical partitions,
 latencies, and dropout schedule.
+
+The environment also owns the execution substrate: the device-resident
+train stacks and (optionally, ``SimConfig.mesh``) the device mesh the
+fused round step client-shards over — see :class:`SimEnv` and
+DESIGN.md §Scale-mapping.
 """
 from __future__ import annotations
 
@@ -16,6 +21,7 @@ import numpy as np
 
 from repro.core import tiering
 from repro.core.clients import make_client_update, make_eval_fn
+from repro.runtime import sharding
 from repro.data.federated import FederatedDataset, make_federated, pad_stack
 from repro.models import cnn
 
@@ -47,12 +53,49 @@ class SimConfig:
     delay_bands: Tuple[Tuple[float, float], ...] = PAPER_DELAY_BANDS
     #: unstable clients drop permanently at uniform(*dropout_window)
     dropout_window: Tuple[float, float] = (50.0, 400.0)
+    #: named device mesh for the fused round step (launch/mesh.py grammar:
+    #: None/"single" | "host[:n_pods]" | "production[:n_pods]").  With a
+    #: data axis > 1 the per-round client fan-out is sharded over it
+    #: (core/executor.py); clients_per_round must then pad to a multiple
+    #: of the data-axis size.
+    mesh: Optional[str] = None
+    #: additionally shard the tier-model stack over the mesh's pod axis
+    #: (only meaningful when the mesh has one)
+    shard_tiers: bool = False
 
 
 class SimEnv:
+    """One materialized scenario: partitions, latencies/tiers, dropout
+    schedule, model init, the device-resident data plane, and (optionally)
+    the device mesh the fused round step shards over.
+
+    ``sc.mesh`` names the mesh (launch/mesh.py grammar); with a data axis
+    of size D > 1 the executor runs the per-round client stack under
+    ``shard_map`` with clients split over ``data``, which requires
+    ``clients_per_round % D == 0`` (checked here so misconfiguration
+    fails at build time, before any compile).
+    """
+
     def __init__(self, sc: SimConfig):
         self.sc = sc
         rng = np.random.default_rng(sc.seed)
+
+        # device mesh for the sharded round step (None = single device);
+        # resolved here (lazily per env) so importing never touches
+        # jax device state.
+        from repro.launch import mesh as mesh_mod
+        self.mesh = mesh_mod.resolve_mesh(sc.mesh)
+        # sized from this env's own mesh only — never the thread-local
+        # ambient mesh (a no-mesh env built inside a use_mesh() context
+        # must stay single-device)
+        self.data_axis = (self.mesh.shape.get("data", 1)
+                          if self.mesh is not None else 1)
+        if sc.clients_per_round % self.data_axis:
+            k, d = sc.clients_per_round, self.data_axis
+            raise ValueError(
+                f"clients_per_round={k} does not pad to a multiple of the "
+                f"mesh data axis (size {d}, mesh {sc.mesh!r}); use a "
+                f"multiple of {d} (e.g. {((k + d - 1) // d) * d})")
         self.rng = rng
         self.ds = make_federated(
             task=sc.task, n_clients=sc.n_clients, n_classes=sc.n_classes,
@@ -107,11 +150,25 @@ class SimEnv:
 
         # device-resident data plane: the padded train stacks live on
         # device once; per-event selection is an in-graph gather
-        # (core/executor.py), never a host->device copy
-        self.train_dev = {k: jnp.asarray(self.train[k])
+        # (core/executor.py), never a host->device copy.  Under a mesh the
+        # stacks shard along the client axis (logical "clients" ->
+        # physical "data", runtime/sharding.py) when the client count
+        # divides evenly; otherwise they stay replicated — the gather runs
+        # in the auto-sharded region, so placement is a perf choice, not a
+        # correctness one.
+        self.train_dev = {k: self._place_stack(self.train[k])
                           for k in ("x", "y", "mask")}
         self._test_dev = None
         self._executor = None
+
+    def _place_stack(self, arr: np.ndarray):
+        """Upload one (n_clients, ...) train stack, client-sharded when the
+        mesh's data axis divides the client count."""
+        if self.mesh is None or self.sc.n_clients % self.data_axis:
+            return jnp.asarray(arr)
+        place = sharding.logical_sharding(
+            ("clients",) + (None,) * (arr.ndim - 1), self.mesh)
+        return jax.device_put(arr, place)
 
     def _stack_test(self):
         cap = max(len(c.y_test) for c in self.ds.clients)

@@ -8,7 +8,9 @@ production mesh.
 
 Physical mesh axes (see :mod:`repro.launch.mesh`):
   * ``pod``   — FedAT tier axis (multi-pod mesh only)
-  * ``data``  — intra-tier data parallelism + FSDP weight sharding
+  * ``data``  — intra-tier data parallelism + FSDP weight sharding,
+                and the per-round *client* axis of the fused round step
+                (core/executor.py shards ``clients_per_round`` over it)
   * ``model`` — tensor parallelism (heads / mlp / vocab / experts)
 """
 from __future__ import annotations
@@ -24,6 +26,9 @@ Axis = Union[str, Tuple[str, ...], None]
 
 # Logical-name -> physical mesh axis (or tuple of axes).
 DEFAULT_RULES: Dict[str, Axis] = {
+    # federated round execution (core/executor.py / core/simulation.py)
+    "clients": "data",          # per-round client fan-out + resident stacks
+    "tiers": "pod",             # tier-model stack leading dim (optional)
     # activations
     "batch": ("pod", "data"),   # global batch over pods (tiers) x data
     "seq": None,                # activation sequence dim: replicated
@@ -80,7 +85,9 @@ def _resolve(axes: Sequence[Optional[str]], mesh: Mesh, rules: Dict[str, Axis]) 
         # drop axes not present in this mesh (e.g. "pod" on the single-pod mesh)
         if isinstance(ax, tuple):
             ax = tuple(a for a in ax if a in mesh.shape and a not in used)
-            ax = ax if ax else None
+            # unwrap 1-tuples: P(("data",)) and P("data") denote the same
+            # partitioning but only compare equal on newer jax
+            ax = ax[0] if len(ax) == 1 else (ax if ax else None)
         elif ax not in mesh.shape or ax in used:
             ax = None
         if ax is not None:
@@ -110,7 +117,10 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     if mesh is None:
         return x
     spec = _resolve(axes, mesh, current_rules())
-    am = jax.sharding.get_abstract_mesh()
+    # jax >= 0.5 tracks an ambient abstract mesh inside shard_map bodies;
+    # on older versions the concrete mesh is always the right target.
+    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
+    am = get_am() if get_am is not None else None
     if am is not None and not am.empty and set(am.axis_names) == set(
             mesh.axis_names):
         return jax.lax.with_sharding_constraint(x, NamedSharding(am, spec))
@@ -129,7 +139,11 @@ def tree_shardings(axes_tree, mesh: Optional[Mesh] = None):
 
 
 def mesh_axis_size(name: str) -> int:
-    """Size of a physical mesh axis under the current mesh (1 if absent)."""
+    """Size of a physical mesh axis under the thread-local current mesh
+    (1 if absent).  Note for mesh-carrying objects (``SimEnv``,
+    ``RoundExecutor``): size axes from your *own* mesh directly — this
+    helper reads the ambient mesh, which is wrong for a no-mesh
+    environment built inside a ``use_mesh()`` context."""
     mesh = current_mesh()
     if mesh is None or name not in mesh.shape:
         return 1

@@ -41,8 +41,24 @@ def test_json_round_trip_golden():
     # is part of the provenance contract — changing any default field,
     # field name, or the canonicalization breaks attribution of archived
     # bench results and must be deliberate (bump SPEC_VERSION).
-    assert d["spec_version"] == api.SPEC_VERSION == 1
-    assert spec.hash() == "e205d71532b8"
+    # v2 added the mesh section (client-sharded round executor).
+    assert d["spec_version"] == api.SPEC_VERSION == 2
+    assert spec.hash() == "28270e27a27d"
+
+
+def test_v1_spec_documents_still_parse():
+    """A version-1 document (pre-mesh) parses to the single-device default;
+    unknown versions still fail with the supported range."""
+    spec = api.ExperimentSpec()
+    d = spec.to_dict()
+    d.pop("mesh")
+    d["spec_version"] = 1
+    back = api.ExperimentSpec.from_dict(d)
+    assert back == spec
+    assert back.mesh == api.MeshSpec()    # single-device default
+    d["spec_version"] = 99
+    with pytest.raises(api.SpecError, match=r"spec_version 99"):
+        api.ExperimentSpec.from_dict(d)
 
 
 def test_hash_tracks_content_not_formatting():

@@ -25,8 +25,8 @@ SCRIPT = textwrap.dedent("""
     from repro.runtime import sharding as shd
     from repro.runtime.hlo import collective_bytes, count_collectives
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = registry.get_smoke_config("{arch}")
     tcfg = TrainConfig(fedat_enabled=True, fedat_sync_every=2,
                        fedat_compress_bits=8)
@@ -40,11 +40,13 @@ SCRIPT = textwrap.dedent("""
                        out_shardings=(fns.state_shardings, None)
                        ).lower(state, batch).compile()
     txt = comp.as_text()
+    ca = comp.cost_analysis()           # dict on new jax, list on 0.4.x
+    ca = (ca[0] if ca else {{}}) if isinstance(ca, list) else ca
     out = {{
         "colls": count_collectives(txt),
         "coll_bytes": collective_bytes(txt),
         "temp": comp.memory_analysis().temp_size_in_bytes,
-        "flops": comp.cost_analysis().get("flops", 0),
+        "flops": ca.get("flops", 0),
     }}
     print("RESULT" + json.dumps(out))
 """)
@@ -76,8 +78,8 @@ INT_WIRE_SCRIPT = textwrap.dedent("""
     from repro.models import lm
     from repro.runtime import sharding as shd
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = registry.get_smoke_config("qwen2-7b")
     tcfg = TrainConfig(fedat_enabled=True, fedat_sync_every=1,
                        fedat_compress_bits=8)

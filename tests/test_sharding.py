@@ -4,14 +4,13 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import make_mesh
 from repro.runtime import sharding as shd
 from repro.runtime.hlo import collective_bytes, count_collectives
 
 
 def _mesh2():
-    n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((len(jax.devices()), 1), ("data", "model"))
 
 
 def test_rules_resolution():

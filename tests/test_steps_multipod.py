@@ -12,6 +12,7 @@ import pytest
 
 from repro.configs import TrainConfig, registry
 from repro.core import steps
+from repro.launch import mesh as mesh_mod
 from repro.runtime import sharding as shd
 
 
@@ -19,9 +20,8 @@ def _mesh(n_pods=2):
     n = len(jax.devices())
     if n % n_pods:
         n_pods = 1
-    return jax.make_mesh(
-        (n_pods, n // n_pods, 1), ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return mesh_mod.make_mesh(
+        (n_pods, n // n_pods, 1), ("pod", "data", "model"))
 
 
 @pytest.fixture(scope="module")
@@ -83,9 +83,8 @@ def test_loss_decreases_over_steps(setup):
 
 
 def test_single_pod_step_runs():
-    mesh = jax.make_mesh(
-        (len(jax.devices()), 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = mesh_mod.make_mesh(
+        (len(jax.devices()), 1), ("data", "model"))
     cfg = registry.get_smoke_config("granite-moe-3b-a800m")
     tcfg = TrainConfig(lr=1e-3)
     with mesh, shd.use_mesh(mesh):
