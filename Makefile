@@ -3,7 +3,7 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench-engine smoke-example docs check-docs
+.PHONY: test bench-smoke bench-engine smoke-example smoke-lm docs check-docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -22,15 +22,26 @@ check-docs:
 smoke-example:
 	$(PY) examples/quickstart.py --updates 12
 
+# 2-round federated tiny_lm through the CLI: exercises the model
+# registry path (data.model) end-to-end on every push (CI runs this)
+smoke-lm:
+	$(PY) -m repro.api.cli \
+	    --set data.model=tiny_lm --set data.n_clients=8 \
+	    --set data.samples_per_client=12 --set tiers.n_tiers=2 \
+	    --set tiers.clients_per_round=2 --set tiers.n_unstable=0 \
+	    --set engine.local_epochs=1 --set engine.total_updates=2 \
+	    --set engine.eval_every=2
+
 # codec + codec_e2e only: the attention/scan kernel benches hit a known
 # jax-version incompatibility in interpret mode (see test_kernels skips)
 bench-smoke:
 	$(PY) -m benchmarks.run codec codec_e2e
 
-# engine hot-path throughput (events/sec per strategy) + the scale axis:
-# the 512-client scaled scenario single-device and client-sharded on a
-# forced multi-device host mesh (subprocess) + machine-readable JSON for
+# engine hot-path throughput (events/sec per strategy) + the scale axis
+# (512-client scenario single-device and client-sharded on a forced
+# multi-device host mesh, subprocess) + the federated-LM path
+# (tiny_lm with/without the polyline codec) + machine-readable JSON for
 # cross-PR perf tracking
 bench-engine:
-	$(PY) -m benchmarks.run engine engine_scaled engine_sharded \
-	    --json BENCH_engine.json
+	$(PY) -m benchmarks.run engine engine_scaled engine_lm \
+	    engine_sharded --json BENCH_engine.json

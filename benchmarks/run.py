@@ -12,7 +12,12 @@ structured result carries the spec hash that produced it.
   PYTHONPATH=src python -m benchmarks.run           # everything
   PYTHONPATH=src python -m benchmarks.run table1 fig5 kernels
   PYTHONPATH=src python -m benchmarks.run engine engine_scaled \\
-      engine_sharded --json BENCH_engine.json
+      engine_lm engine_sharded --json BENCH_engine.json
+
+``engine_lm`` measures the federated-LM path (``data.model=tiny_lm``
+through the model registry) with and without the polyline codec —
+events/sec, bytes-on-wire, and a result hash over the accuracy
+trajectory.
 
 ``--json PATH`` additionally writes the structured results of the
 ``engine*`` targets (events/sec, per-event us, fused-step trace counts,
@@ -285,6 +290,63 @@ def engine_scaled():
     })
 
 
+def _lm_spec(codec=None):
+    """The federated-LM scenario: tiny_lm (models/registry.py) over
+    class-conditional token streams, 24 clients / 3 tiers."""
+    return api.ExperimentSpec(
+        data=api.DataSpec(model="tiny_lm", n_clients=24,
+                          classes_per_client=2, samples_per_client=24,
+                          vocab_size=64, seq_len=16, seed=9),
+        tiers=api.TierSpec(n_tiers=3, clients_per_round=4, n_unstable=2),
+        strategy=api.StrategySpec(name="fedat"),
+        transport=api.TransportSpec(codec=codec),
+        engine=api.EngineSpec(total_updates=24, eval_every=12,
+                              local_epochs=1))
+
+
+def engine_lm():
+    """Federated LM through the registry path: events/sec and
+    bytes-on-wire with and without the polyline codec.  Each record
+    carries the spec hash and a result hash (sha256 over the accuracy
+    trajectory) so the LM path's output is attributable and comparable
+    across PRs."""
+    import hashlib
+    for codec in ("none", "polyline:4"):
+        spec = _lm_spec(codec)
+        n = spec.engine.total_updates
+        # both codecs share one cached env; record only this scenario's
+        # trace delta (warm compile + timed run) so each record reads
+        # "one trace per config" on its own
+        before = dict(api.get_env(spec).executor().trace_counts)
+        warm = spec.with_overrides({"engine.total_updates": 3})
+        api.build(warm).run()        # warm: compile the fused step once
+        run = api.build(spec)
+        t0 = time.perf_counter()
+        m = run.run().metrics
+        dt = time.perf_counter() - t0
+        total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
+        tag = f"lm_{codec.replace(':', '_')}"
+        emit(f"engine/{tag}", dt / n * 1e6,
+             f"events_per_sec={n / dt:.2f};acc={m.best_acc:.3f}"
+             f";total_mb={total_mb:.2f}")
+        result_hash = hashlib.sha256(
+            np.asarray(m.acc, np.float64).tobytes()).hexdigest()[:12]
+        JSON_DOC["results"].append({
+            "strategy": "fedat", "scenario": tag, "model": "tiny_lm",
+            "codec": codec, "total_updates": n,
+            "events_per_sec": round(n / dt, 3),
+            "us_per_event": round(dt / n * 1e6, 1),
+            "best_acc": round(m.best_acc, 4),
+            "bytes_up": m.bytes_up[-1], "bytes_down": m.bytes_down[-1],
+            "trace_counts": {
+                "/".join(map(str, k)): v - before.get(k, 0)
+                for k, v in run.env.executor().trace_counts.items()
+                if v - before.get(k, 0)},
+            "result_hash": result_hash,
+            "spec_hash": spec.hash(),
+        })
+
+
 def engine_sharded():
     """The scaled scenario under a multi-device host mesh, measured in a
     subprocess with ``--xla_force_host_platform_device_count`` (the only
@@ -386,6 +448,7 @@ ALL = {
     "codec_e2e": codec_e2e,
     "engine": engine,
     "engine_scaled": engine_scaled,
+    "engine_lm": engine_lm,
     "engine_sharded": engine_sharded,
     "kernels": kernels,
     "trainer": trainer,

@@ -13,27 +13,14 @@ import jax
 import numpy as np
 
 from repro.configs import TrainConfig
-from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
+from repro.configs.tiny_lm import dense_lm
 from repro.checkpoint import CheckpointManager
 from repro.core import steps as steps_mod
 from repro.data.pipeline import TokenPipeline
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import sharding as shd
 from repro.runtime.fault import GuardedRunner
-
-
-def make_config(d_model: int, n_layers: int) -> ModelConfig:
-    # --full => ~100M params (12L, d=768, ff=2048, vocab 32k); the default
-    # ~14M variant keeps the example CPU-friendly (same code path).
-    heads = max(d_model // 64, 1)
-    kv = 4 if heads % 4 == 0 else heads
-    return ModelConfig(name=f"lm-{n_layers}x{d_model}", family="dense",
-                       n_layers=n_layers, d_model=d_model,
-                       n_heads=heads, n_kv_heads=kv,
-                       head_dim=64, d_ff=int(d_model * 8 / 3) // 64 * 64,
-                       vocab_size=32000 if d_model >= 768 else 8192,
-                       attn_chunk=256)
 
 
 def main():
@@ -46,7 +33,10 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/tiered_pretrain")
     args = ap.parse_args()
 
-    cfg = make_config(768, 12) if args.full else make_config(320, 6)
+    # --full => ~100M params (12L, d=768); the ~14M default keeps the
+    # example CPU-friendly.  Sized via the shared configs/tiny_lm.dense_lm
+    # builder so model shapes are named in exactly one place.
+    cfg = dense_lm(768, 12) if args.full else dense_lm(320, 6)
     print(f"model: {cfg.param_count()/1e6:.0f}M params")
     shape = ShapeConfig("example", args.seq, args.batch, "train")
     tcfg = TrainConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps,

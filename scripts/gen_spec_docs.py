@@ -21,6 +21,8 @@ import re
 import sys
 import textwrap
 
+import numpy as np
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
@@ -29,6 +31,7 @@ from repro.compress import transport                         # noqa: E402
 from repro.core import strategies                            # noqa: E402
 from repro.data import federated                             # noqa: E402
 from repro.launch import mesh as mesh_mod                    # noqa: E402
+from repro.models import registry as model_registry          # noqa: E402
 
 OUT = os.path.join(REPO, "docs", "SPEC.md")
 
@@ -138,7 +141,22 @@ def registries_md() -> str:
     out = ["## Registries", "",
            "The open extension points the spec's string fields resolve "
            "through.", "",
-           "### Strategies (`strategy.name`)", "",
+           "### Models (`data.model`)", "",
+           "Registered in `models/registry.py` "
+           "(`register_model(name, factory)`); each entry binds an "
+           "`FLModel` (init_params / apply / loss / eval_metrics / "
+           "batch_shape) to the scenario's data dims and declares the "
+           "data kind the partitioner synthesizes.  The v1/v2 "
+           "`data.task` values migrate: "
+           + ", ".join(f"`{t}` → `{m}`" for t, m in
+                       sorted(model_registry.LEGACY_TASKS.items()))
+           + ".", ""]
+    for name in model_registry.registered_models():
+        m = model_registry.build_model(name, model_registry.DataDims())
+        out.append(f"- `{name}` — data kind `{m.data_kind}`, per-sample "
+                   f"input `{tuple(m.batch_shape)}` "
+                   f"{np.dtype(m.batch_dtype).name}")
+    out += ["", "### Strategies (`strategy.name`)", "",
            "Registered in `core/strategies/STRATEGIES`; "
            "`strategy.kwargs` is checked against the constructor "
            "signature.", ""]

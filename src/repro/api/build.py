@@ -9,12 +9,22 @@ fused-round steps).  ``Run.run()`` executes the event loop and returns a
 :class:`Result` carrying the metrics, the spec echo, and the spec hash
 for provenance; ``sweep()`` expands a cartesian grid of dotted-path
 overrides into tagged runs.
+
+Checkpointing: ``Run.run(checkpoint_dir=...)`` persists the final global
+params (checkpoint/ckpt.py: atomic, integrity-hashed) next to a
+``spec.json`` carrying the producing spec and its hash;
+``build(spec, resume_from=dir)`` restores those params as the run's
+initial model **iff** the saved spec hash matches the current spec's
+(mismatch is an actionable :class:`SpecError` — results must stay
+attributable to exactly one configuration).
 """
 from __future__ import annotations
 
 import dataclasses
 import inspect
 import itertools
+import json
+import os
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
 from repro.api.spec import ExperimentSpec, SpecError
@@ -85,40 +95,132 @@ class Result:
 @dataclasses.dataclass
 class Run:
     """A materialized experiment, ready to execute (repeatable: each
-    ``run()`` restarts the engine from the bound strategy's fresh state)."""
+    ``run()`` restarts the engine from the bound strategy's fresh state).
+
+    ``initial_params`` (set by ``build(resume_from=...)``) replaces the
+    environment's seeded model init for the duration of the run —
+    strategies copy their server state at bind time, and the original
+    ``params0`` is restored afterwards so the cached environment stays
+    reproducible for other runs.
+    """
     spec: ExperimentSpec
     env: SimEnv
     strategy: ServerStrategy
     cfg: EngineConfig
     tag: str = ""
+    initial_params: Optional[Any] = None
 
-    def run(self, on_eval: Optional[Callable[[dict], None]] = None
-            ) -> Result:
+    def run(self, on_eval: Optional[Callable[[dict], None]] = None,
+            checkpoint_dir: Optional[str] = None) -> Result:
         """Execute the event loop; ``on_eval`` streams each recorded eval
-        point (dict with time/round/acc/acc_var/bytes_up/bytes_down)."""
-        metrics = run_engine(self.env, self.strategy, self.cfg,
-                             on_record=on_eval)
+        point (dict with time/round/acc/acc_var/bytes_up/bytes_down).
+        ``checkpoint_dir`` saves the final global params + the producing
+        spec (hash-stamped) there, resumable via
+        ``build(spec, resume_from=checkpoint_dir)``."""
+        params0 = self.env.params0
+        if self.initial_params is not None:
+            self.env.params0 = self.initial_params
+        try:
+            metrics = run_engine(self.env, self.strategy, self.cfg,
+                                 on_record=on_eval)
+        finally:
+            self.env.params0 = params0
+        if checkpoint_dir is not None:
+            save_checkpoint(checkpoint_dir, self.spec,
+                            self.strategy.global_params(),
+                            step=self.cfg.total_updates)
         return Result(spec=self.spec, spec_hash=self.spec.hash(),
                       metrics=metrics, tag=self.tag)
 
 
-def build(spec: ExperimentSpec, env: Optional[SimEnv] = None) -> Run:
+def save_checkpoint(directory: str, spec: ExperimentSpec, params: Any,
+                    step: int) -> None:
+    """Final-params checkpoint (checkpoint/ckpt.py) + spec provenance
+    sidecar; blocking write so the caller can exit immediately after.
+
+    The directory holds exactly one spec's checkpoint: stale steps left
+    by earlier runs are cleared first — otherwise the manager's
+    keep-last-k GC (which prunes by ascending step number) could delete
+    the step being written when a reused directory holds higher-numbered
+    steps from a previous spec.
+    """
+    import shutil
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(directory)
+    for s in mgr.all_steps():
+        if s != step:
+            shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
+                          ignore_errors=True)
+    mgr.save(step, {"params": params}, blocking=True)
+    sidecar = os.path.join(directory, "spec.json")
+    tmp = sidecar + ".tmp"
+    with open(tmp, "w") as f:
+        # "step" binds the sidecar to the exact step it describes: the
+        # manager keeps the last k steps, so a reused directory may hold
+        # stale steps written by other specs
+        json.dump({"spec_hash": spec.hash(), "step": step,
+                   "spec": spec.to_dict()}, f, indent=2)
+    os.replace(tmp, sidecar)  # atomic, like the checkpoint itself
+
+
+def _load_checkpoint(directory: str, spec: ExperimentSpec,
+                     env: SimEnv) -> Any:
+    """Restore params for ``spec`` from ``directory``; spec-hash mismatch
+    (or a missing/corrupt checkpoint) is an actionable SpecError."""
+    from repro.checkpoint import CheckpointManager
+    sidecar = os.path.join(directory, "spec.json")
+    if not os.path.exists(sidecar):
+        raise SpecError(
+            f"no spec.json in checkpoint dir {directory!r}; expected a "
+            f"checkpoint written by Run.run(checkpoint_dir=...)")
+    try:
+        with open(sidecar) as f:
+            saved = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SpecError(f"unreadable spec.json in checkpoint dir "
+                        f"{directory!r}: {e}") from e
+    if saved.get("spec_hash") != spec.hash():
+        raise SpecError(
+            f"checkpoint {directory!r} was written by spec "
+            f"{saved.get('spec_hash')} but the current spec hashes to "
+            f"{spec.hash()}; load the matching spec from "
+            f"{sidecar!r} (api.ExperimentSpec.from_dict(doc['spec'])) or "
+            f"point resume_from at a checkpoint of this spec")
+    try:
+        # restore the exact step the sidecar describes — never "latest",
+        # which in a reused directory could be another spec's params
+        state, _ = CheckpointManager(directory).restore(
+            like={"params": env.params0}, step=saved.get("step"))
+    except FileNotFoundError as e:
+        raise SpecError(f"checkpoint dir {directory!r} has a spec.json "
+                        f"but no restorable step "
+                        f"{saved.get('step')}: {e}") from e
+    return state["params"]
+
+
+def build(spec: ExperimentSpec, env: Optional[SimEnv] = None,
+          resume_from: Optional[str] = None) -> Run:
     """Validate the spec and materialize ``(SimEnv, strategy, EngineConfig)``.
 
     ``env`` injects an already-built environment (the legacy ``run_*``
     shims use this); when provided it *overrides* the spec's data/tiers
     materialization — the caller vouches that it matches.
+    ``resume_from`` restores a ``Run.run(checkpoint_dir=...)`` checkpoint
+    as the initial model (spec hash must match).
     """
     spec.validate()
     if env is None:
         env = get_env(spec)
+    initial = (None if resume_from is None
+               else _load_checkpoint(resume_from, spec, env))
     return Run(
         spec=spec, env=env, strategy=_make_strategy(spec),
         cfg=EngineConfig(total_updates=spec.engine.total_updates,
                          eval_every=spec.engine.eval_every,
                          seed=spec.engine.seed,
                          retier_every=spec.tiers.retier_every,
-                         retier_drift=spec.tiers.retier_drift))
+                         retier_drift=spec.tiers.retier_drift),
+        initial_params=initial)
 
 
 def run_spec(spec: ExperimentSpec, env: Optional[SimEnv] = None,

@@ -16,6 +16,13 @@ adds a grid axis.  Values parse as JSON when possible (``null`` -> None,
 record per run: tag, spec hash, full spec echo, summary, and the eval
 trajectory — enough to reproduce or re-plot any run.
 
+Models come from the registry (``models/registry.py``): ``--set
+data.model=tiny_lm`` runs a federated LM over token streams through the
+same engine/codec/mesh stack (``data.task=image|text`` still works as a
+deprecated alias for the paper models).  ``--checkpoint-dir`` saves the
+final params + spec hash after a single run; ``--resume-from`` restores
+such a checkpoint as the initial model (the saved spec hash must match).
+
 Client-sharded execution: ``--set mesh.kind=host`` runs the fused round
 step sharded over however many local devices exist (force N CPU devices
 with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
@@ -84,17 +91,25 @@ def main(argv: List[str] = None) -> List[api.Result]:
     ap.add_argument("--out", metavar="FILE",
                     help="write per-run results (spec echo + hash + "
                          "trajectory) as JSON")
+    ap.add_argument("--checkpoint-dir", metavar="DIR",
+                    help="save final params + spec hash after the run "
+                         "(single runs only)")
+    ap.add_argument("--resume-from", metavar="DIR",
+                    help="restore initial params from a --checkpoint-dir "
+                         "checkpoint whose spec hash matches")
     ap.add_argument("--print-spec", action="store_true",
                     help="print the resolved base spec and exit")
     args = ap.parse_args(argv)
-
-    if args.spec:
-        with open(args.spec) as f:
-            spec = api.ExperimentSpec.from_dict(json.load(f))
-    else:
-        spec = api.ExperimentSpec()
+    if (args.checkpoint_dir or args.resume_from) and args.sweeps:
+        ap.error("--checkpoint-dir/--resume-from apply to single runs, "
+                 "not sweeps")
 
     try:
+        if args.spec:
+            with open(args.spec) as f:
+                spec = api.ExperimentSpec.from_dict(json.load(f))
+        else:
+            spec = api.ExperimentSpec()
         overrides = {}
         for s in args.sets:
             path, val = _parse_assignment(s, "--set")
@@ -117,7 +132,8 @@ def main(argv: List[str] = None) -> List[api.Result]:
             results = api.sweep(spec, grid, on_result=_print_row)
         else:
             print(f"spec {spec.hash()}", flush=True)
-            res = api.build(spec).run()
+            res = api.build(spec, resume_from=args.resume_from).run(
+                checkpoint_dir=args.checkpoint_dir)
             _print_row(res)
             results = [res]
     except api.SpecError as e:

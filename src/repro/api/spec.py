@@ -4,7 +4,7 @@ One :class:`ExperimentSpec` composes the whole scenario space the paper
 spans — partition skew, tier counts, dropout profiles, codecs, re-tiering,
 server policy — from five nested sections:
 
-  * :class:`DataSpec`      what the clients hold (task, partitioner, sizes)
+  * :class:`DataSpec`      what the clients hold (model, partitioner, sizes)
   * :class:`TierSpec`      latency tiers, dropout profile, re-tiering cadence
   * :class:`StrategySpec`  server policy by registry name + kwargs
   * :class:`TransportSpec` the link codec by registry string
@@ -18,9 +18,11 @@ bench artifacts so every result is attributable to an exact configuration.
 ``validate()`` front-loads actionable errors (unknown strategy/codec/
 partitioner names list what *is* registered) before any expensive build.
 
-Registry extension points: strategies (``core/strategies/STRATEGIES``),
-codecs (``compress/transport.register_codec``), partitioners
-(``data/federated.parse_partitioner`` grammar).  See DESIGN.md §API.
+Registry extension points: models (``models/registry.register_model``),
+strategies (``core/strategies/STRATEGIES``), codecs
+(``compress/transport.register_codec``), partitioners
+(``data/federated.parse_partitioner`` grammar).  See DESIGN.md §API and
+§Model-registry.
 """
 from __future__ import annotations
 
@@ -33,13 +35,36 @@ from typing import Any, Dict, Optional, Tuple
 from repro.compress import transport
 from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 
-#: Version 2 added the ``mesh`` section (client-sharded round executor).
-#: Version-1 documents (no ``mesh`` key) still parse — they get the
-#: single-device default — but serialization always emits the current
-#: version, so hashes of re-serialized v1 specs change (deliberately:
-#: the mesh is now part of what a result is attributable to).
-SPEC_VERSION = 2
-_READABLE_VERSIONS = (1, 2)
+#: Version 3 replaced ``data.task`` (a two-value enum) with ``data.model``
+#: (a registry name: models/registry.py) and added the token-data knobs
+#: (``vocab_size``/``seq_len``).  Version 2 added the ``mesh`` section
+#: (client-sharded round executor).  Version-1/2 documents still parse —
+#: a ``task`` key migrates through the deprecation shim
+#: (``image`` -> ``cnn``, ``text`` -> ``logreg``), a missing ``mesh``
+#: section gets the single-device default — but serialization always
+#: emits the current version, so hashes of re-serialized old specs change
+#: (deliberately: the model name is now part of what a result is
+#: attributable to).
+SPEC_VERSION = 3
+_READABLE_VERSIONS = (1, 2, 3)
+
+def _resolve_legacy_task(task: Any, existing_model: Optional[str]) -> str:
+    """The ``data.task`` deprecation shim shared by ``from_dict`` and
+    ``with_overrides``: map a v1/v2 task value to its registered model
+    name (models/registry.LEGACY_TASKS), erroring on unknown values and
+    on conflicts with an explicitly given ``data.model``."""
+    from repro.models.registry import LEGACY_TASKS
+    if task not in LEGACY_TASKS:
+        raise SpecError(
+            f"data.task (deprecated) must be one of "
+            f"{sorted(LEGACY_TASKS)}, got {task!r}; new specs should "
+            f"name a registered model via data.model")
+    model = LEGACY_TASKS[task]
+    if existing_model is not None and existing_model != model:
+        raise SpecError(
+            f"data.task={task!r} (deprecated) conflicts with "
+            f"data.model={existing_model!r}; drop the task key")
+    return model
 
 
 class SpecError(ValueError):
@@ -67,22 +92,36 @@ def _require(cond: bool, msg: str) -> None:
 
 @dataclasses.dataclass
 class DataSpec:
-    """What each client holds.  ``seed`` drives the whole environment
-    materialization (partitions, latencies, dropout schedule, model init);
-    the engine's event-order rng is ``EngineSpec.seed``."""
-    task: str = "image"                  # image (CNN) | text (logreg)
+    """What each client holds and trains.  ``model`` is a registry name
+    (models/registry.py); the bound model decides which data kind the
+    scenario synthesizes (images, feature vectors, token streams).
+    ``seed`` drives the whole environment materialization (partitions,
+    latencies, dropout schedule, model init); the engine's event-order
+    rng is ``EngineSpec.seed``."""
+    #: registered model name: cnn | logreg | tiny_lm | ... (the v1/v2
+    #: ``task`` key migrates: image -> cnn, text -> logreg)
+    model: str = "cnn"
     n_clients: int = 100
     n_classes: int = 10
     partitioner: str = "#class"          # "#class" | "dirichlet:<alpha>"
     classes_per_client: int = 2          # used by the "#class" partitioner
     samples_per_client: int = 60
-    image_hw: int = 12
-    n_features: int = 128
+    image_hw: int = 12                   # image-kind models
+    n_features: int = 128                # features-kind models
+    vocab_size: int = 64                 # tokens-kind models
+    seq_len: int = 16                    # tokens-kind models
     seed: int = 0
 
     def validate(self) -> None:
-        _require(self.task in ("image", "text"),
-                 f"data.task must be 'image' or 'text', got {self.task!r}")
+        from repro.models import registry as model_registry
+        if self.model not in model_registry.MODELS:
+            raise SpecError(
+                f"unknown model {self.model!r}; "
+                f"registered: {model_registry.registered_models()} "
+                f"(register new ones via models/registry.register_model)")
+        _require(self.vocab_size >= 2 and self.seq_len >= 2,
+                 f"data.vocab_size and data.seq_len must be >= 2, got "
+                 f"({self.vocab_size}, {self.seq_len})")
         _require(self.n_clients >= 1,
                  f"data.n_clients must be >= 1, got {self.n_clients}")
         _require(self.n_classes >= 2,
@@ -338,9 +377,23 @@ class ExperimentSpec:
             if not isinstance(sub, dict):
                 raise SpecError(f"section {name!r} must be an object, "
                                 f"got {type(sub).__name__}")
+            if name == "data":
+                sub = cls._migrate_task(dict(sub))
             parts[name] = section_cls(
                 **_strict_fields(section_cls, sub, name))
         return cls(**parts)
+
+    @staticmethod
+    def _migrate_task(data: Dict[str, Any]) -> Dict[str, Any]:
+        """Deprecation shim: the v1/v2 ``data.task`` enum migrates to the
+        registry-backed ``data.model`` (image -> cnn, text -> logreg), so
+        old documents — and ``--set data.task=...`` invocations — keep
+        producing bitwise-identical runs."""
+        if "task" not in data:
+            return data
+        task = data.pop("task")
+        data["model"] = _resolve_legacy_task(task, data.get("model"))
+        return data
 
     def to_json(self, indent: int = 2) -> str:
         return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
@@ -385,6 +438,13 @@ class ExperimentSpec:
         "strategy.kwargs.use_prox": False}``.  Unknown paths raise
         :class:`SpecError`; new keys may only be created under
         ``strategy.kwargs`` (an open dict by design)."""
+        overrides = dict(overrides)
+        if "data.task" in overrides:
+            # deprecated alias: translate up front (order-independent) so
+            # an explicit data.model override conflicts loudly instead of
+            # being silently replaced
+            overrides["data.model"] = _resolve_legacy_task(
+                overrides.pop("data.task"), overrides.get("data.model"))
         d = self.to_dict()
         for path, value in overrides.items():
             parts = path.split(".")
@@ -412,11 +472,12 @@ class ExperimentSpec:
         """Materialization recipe for :class:`~repro.core.simulation.
         SimEnv` (the engine-owned knobs stay out: see env_dict)."""
         return SimConfig(
-            task=self.data.task, n_clients=self.data.n_clients,
+            model=self.data.model, n_clients=self.data.n_clients,
             n_classes=self.data.n_classes,
             classes_per_client=self.data.classes_per_client,
             samples_per_client=self.data.samples_per_client,
             image_hw=self.data.image_hw, n_features=self.data.n_features,
+            vocab_size=self.data.vocab_size, seq_len=self.data.seq_len,
             n_tiers=self.tiers.n_tiers,
             clients_per_round=self.tiers.clients_per_round,
             local_epochs=self.engine.local_epochs,
@@ -435,11 +496,12 @@ class ExperimentSpec:
         an already-built environment (the legacy ``run_*`` shims)."""
         return cls(
             data=DataSpec(
-                task=sc.task, n_clients=sc.n_clients, n_classes=sc.n_classes,
-                partitioner=sc.partitioner,
+                model=sc.model, n_clients=sc.n_clients,
+                n_classes=sc.n_classes, partitioner=sc.partitioner,
                 classes_per_client=sc.classes_per_client,
                 samples_per_client=sc.samples_per_client,
                 image_hw=sc.image_hw, n_features=sc.n_features,
+                vocab_size=sc.vocab_size, seq_len=sc.seq_len,
                 seed=sc.seed),
             tiers=TierSpec(
                 n_tiers=sc.n_tiers, clients_per_round=sc.clients_per_round,

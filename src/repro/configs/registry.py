@@ -15,6 +15,7 @@ from repro.configs import (
     deepseek_moe_16b,
     rwkv6_3b,
     hubert_xlarge,
+    tiny_lm,
 )
 
 _MODULES = {
@@ -28,6 +29,9 @@ _MODULES = {
     "deepseek-moe-16b": deepseek_moe_16b,
     "rwkv6-3b": rwkv6_3b,
     "hubert-xlarge": hubert_xlarge,
+    # CPU-sized dense LM backing the federated ``tiny_lm`` model entry
+    # (models/registry.py); also drivable directly: --arch tiny-lm
+    "tiny-lm": tiny_lm,
 }
 
 ARCH_IDS: List[str] = list(_MODULES)

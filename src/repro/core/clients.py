@@ -1,13 +1,17 @@
-"""Client-side local training (FedAT §4.2).
+"""Client-side local training (FedAT §4.2), generic over registry models.
 
 Each selected client k minimizes the proximal surrogate (Eq. 5):
 
     h_k(w_k) = F_k(w_k) + (lambda/2) ||w_k - w_global||^2
 
-with a local Adam solver (paper hyperparameters: E epochs, batch 10).
-Client updates are *vmapped*: all selected clients of a tier train in one
-jitted call over stacked (client, sample, ...) arrays with sample masks —
-this is what makes the 100-client simulation fast on CPU and is exactly the
+where F_k is the bound model's own objective
+(:class:`repro.models.registry.FLModel` ``loss`` — classification CE for
+the paper models, next-token CE for LMs) and the proximal term is
+pytree-generic (any params structure ``jax.tree`` traverses), with a
+local Adam solver (paper hyperparameters: E epochs, batch 10).  Client
+updates are *vmapped*: all selected clients of a tier train in one jitted
+call over stacked (client, sample, ...) arrays with sample masks — this
+is what makes the 100-client simulation fast on CPU and is exactly the
 batched-lowering pattern a TPU deployment would use.
 """
 from __future__ import annotations
@@ -20,7 +24,7 @@ import jax.numpy as jnp
 
 
 def make_client_update(
-    apply_fn: Callable,
+    model,
     local_epochs: int = 3,
     batch_size: int = 10,
     lr: float = 1e-3,
@@ -31,6 +35,7 @@ def make_client_update(
 ) -> Callable:
     """Returns update(global_params, client_batch, rng) vmapped over clients.
 
+    ``model`` is a bound :class:`repro.models.registry.FLModel`;
     client_batch: {"x": (C, N, ...), "y": (C, N), "mask": (C, N)}.
     Output: (client_params stacked (C, ...), local loss (C,)).
 
@@ -40,11 +45,7 @@ def make_client_update(
     """
 
     def loss_fn(params, global_params, x, y, mask):
-        logits = apply_fn(params, x)
-        labels = jax.nn.one_hot(y, logits.shape[-1])
-        logp = jax.nn.log_softmax(logits)
-        ce = -jnp.sum(labels * logp, axis=-1)
-        ce = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        ce = model.loss(params, x, y, mask)
         prox = 0.5 * prox_lambda * sum(
             jnp.sum(jnp.square(a - b)) for a, b in zip(
                 jax.tree.leaves(params), jax.tree.leaves(global_params)))
@@ -107,14 +108,14 @@ def make_client_update(
     return jax.jit(update) if jit else update
 
 
-def make_eval_fn(apply_fn: Callable) -> Callable:
-    """Per-client test accuracy, vmapped: (params, x (C,N,...), y, mask)."""
+def make_eval_fn(model) -> Callable:
+    """Per-client test accuracy, vmapped: (params, x (C,N,...), y, mask);
+    the metric itself is the bound model's ``eval_metrics``."""
 
     @jax.jit
     def evaluate(params, x, y, mask):
         def one(x_, y_, m_):
-            pred = jnp.argmax(apply_fn(params, x_), axis=-1)
-            return jnp.sum((pred == y_) * m_) / jnp.maximum(jnp.sum(m_), 1.0)
+            return model.eval_metrics(params, x_, y_, m_)
         return jax.vmap(one)(x, y, mask)
 
     return evaluate

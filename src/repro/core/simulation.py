@@ -23,7 +23,7 @@ from repro.core import tiering
 from repro.core.clients import make_client_update, make_eval_fn
 from repro.runtime import sharding
 from repro.data.federated import FederatedDataset, make_federated, pad_stack
-from repro.models import cnn
+from repro.models import registry as model_registry
 
 PAPER_DELAY_BANDS = ((0.0, 0.0), (0.0, 5.0), (6.0, 10.0), (11.0, 15.0),
                      (20.0, 30.0))
@@ -31,13 +31,17 @@ PAPER_DELAY_BANDS = ((0.0, 0.0), (0.0, 5.0), (6.0, 10.0), (11.0, 15.0),
 
 @dataclasses.dataclass
 class SimConfig:
-    task: str = "image"            # image (CNN) | text (logreg)
+    #: registered model name (models/registry.py): cnn | logreg | tiny_lm
+    #: | anything registered since — the model decides the data kind
+    model: str = "cnn"
     n_clients: int = 100
     n_classes: int = 10
     classes_per_client: int = 2
     samples_per_client: int = 60
     image_hw: int = 12
     n_features: int = 128
+    vocab_size: int = 64           # tokens-kind models: vocabulary size
+    seq_len: int = 16              # tokens-kind models: sequence length
     n_tiers: int = 5
     clients_per_round: int = 10
     local_epochs: int = 3
@@ -97,12 +101,21 @@ class SimEnv:
                 f"mesh data axis (size {d}, mesh {sc.mesh!r}); use a "
                 f"multiple of {d} (e.g. {((k + d - 1) // d) * d})")
         self.rng = rng
+        # the bound model (registry) decides the data kind the federated
+        # partitioner synthesizes and how params/loss/eval are built
+        self.model = model_registry.build_model(
+            sc.model, model_registry.DataDims(
+                n_classes=sc.n_classes, image_hw=sc.image_hw,
+                n_features=sc.n_features, vocab_size=sc.vocab_size,
+                seq_len=sc.seq_len))
         self.ds = make_federated(
-            task=sc.task, n_clients=sc.n_clients, n_classes=sc.n_classes,
+            task=self.model.data_kind, n_clients=sc.n_clients,
+            n_classes=sc.n_classes,
             classes_per_client=sc.classes_per_client,
             samples_per_client=sc.samples_per_client, image_hw=sc.image_hw,
             n_features=sc.n_features, seed=sc.seed,
-            partitioner=sc.partitioner)
+            partitioner=sc.partitioner, vocab_size=sc.vocab_size,
+            seq_len=sc.seq_len)
         self.train = pad_stack(self.ds)
         self.test = self._stack_test()
 
@@ -121,30 +134,25 @@ class SimEnv:
         self.dropout_at[self.dropout_ids] = rng.uniform(
             *sc.dropout_window, size=sc.n_unstable)
 
-        # model + jitted client update / eval
+        # model init + jitted client update / eval — all built from the
+        # registry's bound FLModel over arbitrary pytree params
         key = jax.random.PRNGKey(sc.seed)
-        if sc.task == "image":
-            self.params0, self.apply_fn = cnn.make_model(
-                "cnn", key, in_shape=self.ds.input_shape,
-                n_classes=sc.n_classes)
-        else:
-            self.params0, self.apply_fn = cnn.make_model(
-                "logreg", key, n_features=sc.n_features,
-                n_classes=sc.n_classes)
+        self.params0 = self.model.init_params(key)
+        self.apply_fn = self.model.apply
         # raw (un-jitted) update bodies compose inside the fused round
         # step (core/executor.py); jitting the same bodies gives the
         # standalone per-call entry points, so both paths share one trace
         # source and identical numerics.
         self.update_fn_raw = make_client_update(
-            self.apply_fn, local_epochs=sc.local_epochs,
+            self.model, local_epochs=sc.local_epochs,
             batch_size=sc.batch_size, lr=sc.lr,
             prox_lambda=sc.prox_lambda, jit=False)
         self.update_fn_noprox_raw = make_client_update(
-            self.apply_fn, local_epochs=sc.local_epochs,
+            self.model, local_epochs=sc.local_epochs,
             batch_size=sc.batch_size, lr=sc.lr, prox_lambda=0.0, jit=False)
         self.update_fn = jax.jit(self.update_fn_raw)
         self.update_fn_noprox = jax.jit(self.update_fn_noprox_raw)
-        self.eval_fn = make_eval_fn(self.apply_fn)
+        self.eval_fn = make_eval_fn(self.model)
         self.model_bytes = sum(np.asarray(l).nbytes
                                for l in jax.tree.leaves(self.params0))
 
@@ -173,7 +181,7 @@ class SimEnv:
     def _stack_test(self):
         cap = max(len(c.y_test) for c in self.ds.clients)
         n = self.ds.n_clients
-        xs = np.zeros((n, cap) + self.ds.input_shape, np.float32)
+        xs = np.zeros((n, cap) + self.ds.input_shape, self.ds.input_dtype)
         ys = np.zeros((n, cap), np.int32)
         mask = np.zeros((n, cap), bool)
         for i, c in enumerate(self.ds.clients):

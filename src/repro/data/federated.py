@@ -9,11 +9,17 @@ class-conditional datasets with the same *federated structure*:
   * ``dirichlet:<alpha>`` partitioning — per-client label distributions
     drawn from Dir(alpha); small alpha = heavy skew (Hsu et al. 2019),
   * unequal client sizes (log-normal), 80/20 train/test split per client,
-  * "image" task: class-template + noise images (CNN-learnable),
-  * "text" task: class-conditional sparse feature vectors (logreg-learnable).
+  * "image" kind: class-template + noise images (CNN-learnable),
+  * "features" kind: class-conditional feature vectors (logreg-learnable),
+  * "tokens" kind: class-conditional Markov token streams
+    (data/pipeline.py; tiny-LM-learnable next-token structure).
 
-The generator is seeded, so every FL method trains on byte-identical
-partitions (the paper's fixed pseudo-random mini-batch schedule).
+A registered model (models/registry.py) declares which kind it consumes
+via ``FLModel.data_kind``; the partitioners are kind-agnostic.  The
+generator is seeded, so every FL method trains on byte-identical
+partitions (the paper's fixed pseudo-random mini-batch schedule), and the
+image/features draw order is identical to the pre-registry ``task``
+generator (bitwise parity contract).
 """
 from __future__ import annotations
 
@@ -40,6 +46,9 @@ class FederatedDataset:
     clients: List[ClientData]
     n_classes: int
     input_shape: Tuple[int, ...]
+    #: dtype of the per-sample inputs (float32 images/features, int32
+    #: token sequences); pad_stack and the test stacks honor it
+    input_dtype: np.dtype = np.float32
 
     @property
     def n_clients(self) -> int:
@@ -70,6 +79,10 @@ def parse_partitioner(partitioner: str) -> Tuple[str, float]:
                      f"'#class' or 'dirichlet:<alpha>'")
 
 
+#: accepted data kinds; "text" is the pre-registry alias for "features"
+DATA_KINDS = ("image", "features", "tokens")
+
+
 def make_federated(
     task: str = "image",
     n_clients: int = 100,
@@ -81,14 +94,28 @@ def make_federated(
     noise: float = 1.0,
     seed: int = 0,
     partitioner: str = "#class",
+    vocab_size: int = 64,
+    seq_len: int = 16,
 ) -> FederatedDataset:
-    """``#class``: classes_per_client >= n_classes => i.i.d. (uniform over
-    all classes).  ``dirichlet:<alpha>``: per-client class proportions drawn
-    from Dir(alpha); classes_per_client is ignored."""
+    """``task`` is the data kind (``DATA_KINDS``; "text" aliases
+    "features" for pre-registry callers).  ``#class``:
+    classes_per_client >= n_classes => i.i.d. (uniform over all classes).
+    ``dirichlet:<alpha>``: per-client class proportions drawn from
+    Dir(alpha); classes_per_client is ignored."""
+    data_kind = "features" if task == "text" else task
+    if data_kind not in DATA_KINDS:
+        raise ValueError(f"unknown data kind {task!r}; "
+                         f"expected one of {DATA_KINDS} (or 'text')")
     kind, alpha = parse_partitioner(partitioner)
     rng = np.random.default_rng(seed)
-    shape = (image_hw, image_hw, 3) if task == "image" else (n_features,)
-    templates = _class_templates(rng, n_classes, shape)
+    if data_kind == "tokens":
+        shape, dtype = (seq_len,), np.int32
+        templates = None
+    else:
+        shape = ((image_hw, image_hw, 3) if data_kind == "image"
+                 else (n_features,))
+        dtype = np.float32
+        templates = _class_templates(rng, n_classes, shape)
 
     clients = []
     for c in range(n_clients):
@@ -105,11 +132,15 @@ def make_federated(
                                          replace=False)
             n = max(int(rng.lognormal(np.log(samples_per_client), 0.3)), 20)
             y = rng.choice(labels_pool, n).astype(np.int32)
-        x = templates[y] + rng.normal(0, noise, size=(n,) + shape).astype(
-            np.float32)
+        if data_kind == "tokens":
+            from repro.data.pipeline import class_token_sequences
+            x = class_token_sequences(rng, y, vocab_size, seq_len)
+        else:
+            x = templates[y] + rng.normal(
+                0, noise, size=(n,) + shape).astype(np.float32)
         n_tr = int(0.8 * n)
         clients.append(ClientData(x[:n_tr], y[:n_tr], x[n_tr:], y[n_tr:]))
-    return FederatedDataset(clients, n_classes, shape)
+    return FederatedDataset(clients, n_classes, shape, np.dtype(dtype))
 
 
 def pad_stack(ds: FederatedDataset, max_samples: int = 0
@@ -117,7 +148,7 @@ def pad_stack(ds: FederatedDataset, max_samples: int = 0
     """Stack clients into dense arrays (vmap-able): pads with sample masks."""
     cap = max_samples or max(c.n_train for c in ds.clients)
     n = ds.n_clients
-    xs = np.zeros((n, cap) + ds.input_shape, np.float32)
+    xs = np.zeros((n, cap) + ds.input_shape, ds.input_dtype)
     ys = np.zeros((n, cap), np.int32)
     mask = np.zeros((n, cap), bool)
     for i, c in enumerate(ds.clients):

@@ -17,6 +17,32 @@ from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeConfig
 
 
+def class_token_sequences(rng: np.random.Generator, labels: np.ndarray,
+                          vocab_size: int, seq_len: int,
+                          noise: float = 0.1) -> np.ndarray:
+    """Class-conditional token streams for the federated LM path.
+
+    One (seq_len,) int32 sequence per label: class c walks the vocab
+    cyclically with stride ``1 + (c % (V-1))`` from a random start, with a
+    ``noise`` fraction of positions resampled uniformly.  Next-token
+    structure is therefore a per-class affine map — learnable by a tiny
+    causal LM, non-i.i.d. across clients exactly like the image/feature
+    tasks (the partitioner decides which classes a client holds).
+    ``make_federated(kind="tokens")`` (data/federated.py) routes through
+    here, wiring this pipeline into the federated partitioner.
+    """
+    labels = np.asarray(labels)
+    n = len(labels)
+    starts = rng.integers(0, vocab_size, n)
+    steps = 1 + (labels % max(vocab_size - 1, 1))
+    pos = np.arange(seq_len)
+    toks = (starts[:, None] + steps[:, None] * pos[None, :]) % vocab_size
+    resample = rng.random((n, seq_len)) < noise
+    toks = np.where(resample, rng.integers(0, vocab_size, (n, seq_len)),
+                    toks)
+    return toks.astype(np.int32)
+
+
 class TokenPipeline:
     """Stateless-per-step synthetic token source: batch(step) is pure."""
 

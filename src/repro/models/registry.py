@@ -1,0 +1,215 @@
+"""FLModel registry: the federated path to the model zoo.
+
+The engine, executor, and spec API never name a concrete architecture —
+they consume a bound :class:`FLModel`: a small protocol of pure functions
+
+  * ``init_params(key)``                 -> params pytree
+  * ``apply(params, x)``                 -> logits
+  * ``loss(params, x, y, mask)``         -> masked scalar objective
+  * ``eval_metrics(params, x, y, mask)`` -> per-client accuracy scalar
+  * ``batch_shape`` / ``batch_dtype``    -> per-sample input contract
+
+over *arbitrary pytree params* (dicts of arrays, scan-stacked layer
+trees, anything ``jax.tree`` traverses).  Entries are registered as
+factories ``make(dims: DataDims) -> FLModel`` under a string name — the
+name the spec's ``data.model`` field resolves through — so adding a
+model to the federated path is one :func:`register_model` call; the
+partitioner, the fused round step, client sharding, codecs, and the
+provenance hashing all compose unchanged (DESIGN.md §Model-registry).
+
+Registered here:
+
+  * ``cnn``     — the paper's CIFAR/Fashion-MNIST CNN (``models/cnn.py``),
+                  image data (was ``task="image"``).
+  * ``logreg``  — the paper's Sentiment140 logistic regression, feature
+                  vectors (was ``task="text"``).
+  * ``tiny_lm`` — a tiny dense causal LM through the repo's LM facade
+                  (``models/lm.py`` / ``models/transformer.py``,
+                  config ``configs/tiny_lm.py``) over class-conditional
+                  token streams (``data/pipeline.py``).
+
+The ``cnn``/``logreg`` losses are op-for-op the pre-registry client
+objective, so pre-existing image/text specs reproduce their trajectories
+bitwise through this indirection (tests/test_model_registry.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataDims:
+    """The data-plane knobs a model needs to size itself (a subset of
+    ``DataSpec`` — models never see the spec layer)."""
+    n_classes: int = 10
+    image_hw: int = 12
+    n_features: int = 128
+    vocab_size: int = 64
+    seq_len: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class FLModel:
+    """One model bound to a scenario's :class:`DataDims`.
+
+    ``loss`` is the client-local objective the proximal term is added to
+    (core/clients.py); its reduction must weight samples by ``mask`` so
+    the executor's zero-weight padding slots stay exactly neutral.
+    ``eval_metrics`` is the per-client accuracy the engine's periodic
+    eval vmaps over the test stacks.
+    """
+    name: str
+    #: what the federated partitioner synthesizes: "image" (H,W,3 float)
+    #: | "features" (F float) | "tokens" (S int32) — data/federated.py
+    data_kind: str
+    init_params: Callable[[jax.Array], Any]
+    apply: Callable[[Any, jax.Array], jax.Array]
+    loss: Callable[[Any, jax.Array, jax.Array, jax.Array], jax.Array]
+    eval_metrics: Callable[[Any, jax.Array, jax.Array, jax.Array],
+                           jax.Array]
+    #: per-sample input shape/dtype (the padded train stacks are
+    #: (n_clients, cap) + batch_shape arrays of batch_dtype)
+    batch_shape: Tuple[int, ...]
+    batch_dtype: Any = np.float32
+
+
+#: name -> factory(dims) -> FLModel; the extension point data.model
+#: resolves through.
+MODELS: Dict[str, Callable[[DataDims], FLModel]] = {}
+
+
+def register_model(name: str,
+                   factory: Callable[[DataDims], FLModel]) -> None:
+    """Register a model factory under ``name`` (error on duplicates)."""
+    if name in MODELS:
+        raise ValueError(f"model {name!r} is already registered")
+    MODELS[name] = factory
+
+
+def registered_models() -> List[str]:
+    return sorted(MODELS)
+
+
+def build_model(name: str, dims: DataDims) -> FLModel:
+    """Resolve ``name`` and bind it to ``dims`` (the SimEnv entry point)."""
+    if name not in MODELS:
+        raise ValueError(f"unknown model {name!r}; "
+                         f"registered: {registered_models()}")
+    return MODELS[name](dims)
+
+
+# ---------------------------------------------------------------------------
+# classification objective (shared by cnn / logreg)
+# ---------------------------------------------------------------------------
+# These bodies are op-for-op the pre-registry client loss/eval, which is
+# what keeps the engine-parity oracle bitwise through the registry path.
+
+def _classification_loss(apply_fn):
+    def loss(params, x, y, mask):
+        logits = apply_fn(params, x)
+        labels = jax.nn.one_hot(y, logits.shape[-1])
+        logp = jax.nn.log_softmax(logits)
+        ce = -jnp.sum(labels * logp, axis=-1)
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss
+
+
+def _classification_eval(apply_fn):
+    def eval_metrics(params, x, y, mask):
+        pred = jnp.argmax(apply_fn(params, x), axis=-1)
+        return jnp.sum((pred == y) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return eval_metrics
+
+
+def _make_cnn(dims: DataDims) -> FLModel:
+    from repro.models import cnn
+    in_shape = (dims.image_hw, dims.image_hw, 3)
+    return FLModel(
+        name="cnn", data_kind="image",
+        init_params=lambda key: cnn.cnn_init(
+            key, in_shape=in_shape, n_classes=dims.n_classes),
+        apply=cnn.cnn_apply,
+        loss=_classification_loss(cnn.cnn_apply),
+        eval_metrics=_classification_eval(cnn.cnn_apply),
+        batch_shape=in_shape)
+
+
+def _make_logreg(dims: DataDims) -> FLModel:
+    from repro.models import cnn
+    return FLModel(
+        name="logreg", data_kind="features",
+        init_params=lambda key: cnn.logreg_init(
+            key, n_features=dims.n_features, n_classes=dims.n_classes),
+        apply=cnn.logreg_apply,
+        loss=_classification_loss(cnn.logreg_apply),
+        eval_metrics=_classification_eval(cnn.logreg_apply),
+        batch_shape=(dims.n_features,))
+
+
+# ---------------------------------------------------------------------------
+# tiny_lm: the LM facade on the federated path
+# ---------------------------------------------------------------------------
+
+def _make_tiny_lm(dims: DataDims) -> FLModel:
+    """A tiny dense causal LM (``configs/tiny_lm.py``) trained federated
+    on class-conditional token streams.
+
+    Reuses the repo's LM stack end to end: params come from
+    :func:`repro.models.lm.init_params` (scan-stacked layer pytree — the
+    client update, codecs, and Eq. 3/4 averages are pytree-generic), the
+    forward pass is :func:`repro.models.transformer.forward_train`, and
+    the objective is next-token cross-entropy averaged per sample then
+    mask-weighted across the client's (padded) sample slots.
+    """
+    from repro.configs.registry import get_config
+    from repro.models import lm, transformer
+
+    cfg = get_config("tiny-lm").replace(vocab_size=dims.vocab_size)
+
+    def apply(params, x):
+        """x: (B, S) int32 tokens -> logits (B, S, V)."""
+        feats, _, _ = transformer.forward_train(
+            cfg, params, {"tokens": x}, tp=1)
+        return transformer.lm_head(cfg, params, feats).astype(jnp.float32)
+
+    def _per_sample_ce(params, x):
+        logits = apply(params, x)                     # (B, S, V)
+        logp = jax.nn.log_softmax(logits[:, :-1])
+        labels = x[:, 1:]
+        nll = -jnp.take_along_axis(logp, labels[..., None],
+                                   axis=-1)[..., 0]   # (B, S-1)
+        return jnp.mean(nll, axis=-1)                 # (B,)
+
+    def loss(params, x, y, mask):
+        del y  # next-token objective; the class label only shapes the data
+        ce = _per_sample_ce(params, x)
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    def eval_metrics(params, x, y, mask):
+        del y
+        logits = apply(params, x)
+        pred = jnp.argmax(logits[:, :-1], axis=-1)    # (B, S-1)
+        ok = jnp.mean((pred == x[:, 1:]).astype(jnp.float32), axis=-1)
+        return jnp.sum(ok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    return FLModel(
+        name="tiny_lm", data_kind="tokens",
+        init_params=lambda key: lm.init_params(
+            cfg, key, tp=1, dtype=jnp.float32),
+        apply=apply, loss=loss, eval_metrics=eval_metrics,
+        batch_shape=(dims.seq_len,), batch_dtype=np.int32)
+
+
+register_model("cnn", _make_cnn)
+register_model("logreg", _make_logreg)
+register_model("tiny_lm", _make_tiny_lm)
+
+#: the ``task`` values spec versions 1/2 used, mapped to registry names
+#: (the ``data.task`` deprecation shim in api/spec.py resolves through
+#: this, so there is exactly one place the mapping is written down).
+LEGACY_TASKS: Dict[str, str] = {"image": "cnn", "text": "logreg"}

@@ -41,16 +41,26 @@ def test_json_round_trip_golden():
     # is part of the provenance contract — changing any default field,
     # field name, or the canonicalization breaks attribution of archived
     # bench results and must be deliberate (bump SPEC_VERSION).
-    # v2 added the mesh section (client-sharded round executor).
-    assert d["spec_version"] == api.SPEC_VERSION == 2
-    assert spec.hash() == "28270e27a27d"
+    # v3 replaced data.task with the registry-backed data.model (+ token
+    # knobs); v2 added the mesh section (client-sharded round executor).
+    assert d["spec_version"] == api.SPEC_VERSION == 3
+    assert spec.hash() == "e009aead8468"
 
 
-def test_v1_spec_documents_still_parse():
-    """A version-1 document (pre-mesh) parses to the single-device default;
-    unknown versions still fail with the supported range."""
+def test_old_spec_documents_still_parse():
+    """Version-1/2 documents (data.task enum, v1 additionally pre-mesh)
+    parse to the same spec under SPEC_VERSION 3; unknown versions still
+    fail with the supported range.  (Full migration coverage lives in
+    tests/test_model_registry.py.)"""
     spec = api.ExperimentSpec()
     d = spec.to_dict()
+    for k in ("model", "vocab_size", "seq_len"):
+        d["data"].pop(k)
+    d["data"]["task"] = "image"
+    d["spec_version"] = 2
+    back = api.ExperimentSpec.from_dict(d)
+    assert back == spec
+    assert back.data.model == "cnn"       # task shim
     d.pop("mesh")
     d["spec_version"] = 1
     back = api.ExperimentSpec.from_dict(d)
@@ -249,6 +259,89 @@ def test_cli_2x2_sweep_single_invocation(tmp_path):
         assert rec["trajectory"]["acc"]
         assert api.ExperimentSpec.from_dict(rec["spec"]).hash() \
             == rec["spec_hash"]
+
+
+# ---------------------------------------------------------------------------
+# checkpointing (Run.run(checkpoint_dir=...) <-> build(resume_from=...))
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_save_and_resume(tmp_path):
+    ck = str(tmp_path / "ck")
+    spec = _small_spec()
+    res = api.build(spec).run(checkpoint_dir=ck)
+    doc = json.loads((tmp_path / "ck" / "spec.json").read_text())
+    assert doc["spec_hash"] == res.spec_hash
+    assert doc["step"] == spec.engine.total_updates
+    assert api.ExperimentSpec.from_dict(doc["spec"]) == spec
+
+    run = api.build(spec, resume_from=ck)
+    assert run.initial_params is not None
+    params0_before = run.env.params0      # the env's own seeded init
+    assert run.initial_params is not params0_before
+    res2 = run.run()
+    assert np.isfinite(res2.metrics.acc).all()
+    # the *original* params0 object is back after the run (the cached env
+    # stays reproducible; would fail if Run.run's finally-restore broke)
+    assert run.env.params0 is params0_before
+
+
+def test_checkpoint_resume_spec_hash_mismatch(tmp_path):
+    ck = str(tmp_path / "ck")
+    api.build(_small_spec()).run(checkpoint_dir=ck)
+    other = _small_spec(**{"engine.seed": 9})
+    with pytest.raises(api.SpecError, match=r"written by spec .* current "
+                                            r"spec hashes to"):
+        api.build(other, resume_from=ck)
+    with pytest.raises(api.SpecError, match=r"no spec\.json"):
+        api.build(_small_spec(), resume_from=str(tmp_path / "nope"))
+    # a corrupt sidecar (e.g. killed mid-write) is still a SpecError
+    (tmp_path / "ck" / "spec.json").write_text("{truncated")
+    with pytest.raises(api.SpecError, match="unreadable spec.json"):
+        api.build(_small_spec(), resume_from=ck)
+
+
+def test_checkpoint_dir_reuse_holds_exactly_one_spec(tmp_path):
+    """A reused directory holds exactly the sidecar's checkpoint: stale
+    steps from a previous spec are cleared on save (a higher-numbered
+    stale step would otherwise be restored as 'latest', or trip the
+    manager's keep-last-k GC into deleting the fresh step), and resume
+    restores the step the sidecar stamps."""
+    import jax
+    import jax.numpy as jnp
+    ck = str(tmp_path / "ck")
+    spec_a = _small_spec()                           # total_updates=8
+    spec_b = _small_spec(**{"engine.seed": 5, "engine.total_updates": 4})
+    api.build(spec_a).run(checkpoint_dir=ck)         # writes step_8
+    api.build(spec_b).run(checkpoint_dir=ck)         # clears it, writes step_4
+    steps = sorted(int(p.name[5:]) for p in (tmp_path / "ck").iterdir()
+                   if p.name.startswith("step_"))
+    assert steps == [4]                              # A's step_8 is gone
+    doc = json.loads((tmp_path / "ck" / "spec.json").read_text())
+    assert doc["step"] == 4 and doc["spec_hash"] == spec_b.hash()
+    run = api.build(spec_b, resume_from=ck)
+    from repro.checkpoint import CheckpointManager
+    env = api.get_env(spec_b)
+    want, got_step = CheckpointManager(ck).restore(
+        like={"params": env.params0}, step=4)
+    assert got_step == 4
+    assert all(bool(jnp.array_equal(a, b)) for a, b in
+               zip(jax.tree.leaves(run.initial_params),
+                   jax.tree.leaves(want["params"])))
+
+
+def test_cli_checkpoint_roundtrip(tmp_path):
+    ck = str(tmp_path / "cli_ck")
+    args = ["--set", "data.n_clients=12", "--set", "data.image_hw=8",
+            "--set", "data.samples_per_client=20",
+            "--set", "tiers.n_tiers=3", "--set", "tiers.clients_per_round=4",
+            "--set", "tiers.n_unstable=2", "--set", "engine.local_epochs=1",
+            "--set", "engine.total_updates=2", "--set", "engine.eval_every=2"]
+    cli.main(args + ["--checkpoint-dir", ck])
+    results = cli.main(args + ["--resume-from", ck])
+    assert len(results) == 1 and results[0].metrics.acc
+    with pytest.raises(SystemExit):  # argparse error (exit code 2)
+        cli.main(args + ["--checkpoint-dir", ck,
+                         "--sweep", "strategy.name=fedat,fedavg"])
 
 
 def test_cli_set_overrides_and_spec_errors(tmp_path, capsys):

@@ -82,9 +82,17 @@ def test_decode_matches_teacher_forcing(arch):
     assert float(jnp.max(jnp.abs(la - lb))) < 2e-3
 
 
+#: archs with no published size to check against (CPU-sized test models);
+#: every *real* arch must appear in the advertised dict below — a new
+#: production arch missing from it is a hard KeyError, not a skip
+CPU_SIZED_ARCHS = {"tiny-lm"}
+
+
 @pytest.mark.parametrize("arch", ARCHS)
 def test_param_count_order_of_magnitude(arch):
     """Full configs should be within 2x of their advertised size."""
+    if arch in CPU_SIZED_ARCHS:
+        pytest.skip(f"{arch} is a CPU-sized arch with no published size")
     cfg = registry.get_config(arch)
     advertised = {
         "zamba2-2.7b": 2.7e9, "paligemma-3b": 2.5e9,  # text tower only
