@@ -3,10 +3,17 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test bench-smoke bench-engine smoke-example smoke-lm docs check-docs
+.PHONY: test test-kernels bench-smoke bench-engine bench-roofline \
+	smoke-example smoke-lm docs check-docs
 
 test:
 	$(PY) -m pytest -x -q
+
+# the kernel layer as a required job of its own: the Pallas kernels in
+# interpret mode against their jnp oracles + the attention-backend knob
+# (flash vs reference through the model and federated layers)
+test-kernels:
+	$(PY) -m pytest -q tests/test_kernels.py tests/test_attention_backend.py
 
 # regenerate the introspected ExperimentSpec reference (docs/SPEC.md)
 docs:
@@ -32,10 +39,16 @@ smoke-lm:
 	    --set engine.local_epochs=1 --set engine.total_updates=2 \
 	    --set engine.eval_every=2
 
-# codec + codec_e2e only: the attention/scan kernel benches hit a known
-# jax-version incompatibility in interpret mode (see test_kernels skips)
 bench-smoke:
-	$(PY) -m benchmarks.run codec codec_e2e
+	$(PY) -m benchmarks.run codec codec_e2e kernels
+
+# kernel roofline: per-kernel achieved FLOP/s vs the machine roof
+# (calibrated in place off-TPU), merged into BENCH_engine.json next to
+# the engine rows.  SMOKE=1 shrinks sizes/reps (the CI push workflow
+# runs `make bench-roofline SMOKE=1`).
+bench-roofline:
+	$(PY) -m benchmarks.run roofline $(if $(SMOKE),--smoke) \
+	    --json BENCH_engine.json
 
 # engine hot-path throughput (events/sec per strategy) + the scale axis
 # (512-client scenario single-device and client-sharded on a forced

@@ -70,6 +70,8 @@ def _unstack(specs):
 def _cost_of(lowered) -> Dict[str, float]:
     comp = lowered.compile()
     ca = comp.cost_analysis()
+    if isinstance(ca, (list, tuple)):  # some backends return [dict]
+        ca = ca[0] if ca else {}
     return {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),
@@ -376,6 +378,131 @@ def analyze(arch: str, shape_name: str, overrides=None,
     out = dict(cell)
     out.update(roofline_terms(cell, cfg, SHAPES[shape_name]))
     return out
+
+
+# ---------------------------------------------------------------------------
+# kernel roofline: measured achieved FLOP/s per kernel vs the machine roof
+# ---------------------------------------------------------------------------
+# The arch x shape cells above are *analytic* (lowered costs on the
+# production mesh, never executed).  The kernel roofline is *measured*:
+# each kernel-layer entry point runs on this host and its achieved
+# FLOP/s is pinned against the classic ceiling min(peak, AI * bw) — peak
+# and bandwidth from the v5e datasheet on TPU, calibrated in place on
+# anything else (a big matmul and a big stream, so CPU CI numbers are a
+# fraction of a *real* roof, not of a TPU constant they can never hit).
+
+def _calibrate_machine(reps: int = 3):
+    """(peak FLOP/s, memory bytes/s) for the backend the bench runs on."""
+    if jax.default_backend() == "tpu":
+        return float(V5E_PEAK_FLOPS), float(V5E_HBM_BW)
+    import time
+    n = 1024
+    a = jnp.ones((n, n), jnp.float32)
+    mm = jax.jit(lambda x: x @ x)
+    jax.block_until_ready(mm(a))
+    best = min(_timed_call(mm, (a,)) for _ in range(reps))
+    peak = 2.0 * n ** 3 / best
+    big = jnp.ones((16 * 1024 * 1024,), jnp.float32)   # 64 MB stream
+    add = jax.jit(lambda x: x + 1.0)
+    jax.block_until_ready(add(big))
+    best = min(_timed_call(add, (big,)) for _ in range(reps))
+    bw = 2.0 * big.nbytes / best                       # read + write
+    return peak, bw
+
+
+def _timed_call(fn, args) -> float:
+    import time
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def kernel_roofline(smoke: bool = False):
+    """Measure every kernel-layer entry point against the machine roof.
+
+    Returns ``{"machine": {...}, "kernels": [row, ...]}`` where each row
+    has the kernel's HLO flops/bytes (cost_analysis of the exact lowered
+    call), measured best-of-N wall time, achieved FLOP/s and GB/s, and
+    its fraction of the roofline ceiling ``min(peak, AI * bw)`` (compute
+    kernels) / of the bandwidth roof (streaming kernels read the
+    ``bw_frac`` column).  ``smoke`` halves sizes and reps for CI.
+    """
+    from repro.kernels import ops, ref
+    key = jax.random.PRNGKey(0)
+    S = 128 if smoke else 256
+    reps = 2 if smoke else 5
+    peak, bw = _calibrate_machine(reps=2 if smoke else 3)
+
+    B, H, KV, hd = 2, 4, 2, 64
+    kq, kk, kv2 = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(kv2, (B, S, KV, hd), jnp.float32)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = jnp.repeat(k, H // KV, axis=2).transpose(0, 2, 1, 3) \
+        .reshape(B * H, S, hd)
+
+    r = jax.random.normal(key, (4, S, 64), jnp.float32)
+    lw = -jnp.exp(jax.random.normal(key, (4, S, 64)))
+    u = jax.random.normal(key, (4, 64))
+    xs = jax.random.normal(key, (4, S, 64), jnp.float32)
+    bm = jax.random.normal(key, (4, S, 32), jnp.float32)
+    da = -jnp.abs(jax.random.normal(key, (4, S, 1)))
+    flat = jax.random.normal(key, (262_144,), jnp.float32)
+    cq, cs = ops.compress(flat, 8)
+
+    impl = ops.default_attention_impl()
+    cases = [
+        # the flash backend exactly as models/attention routes it here
+        (f"attention_flash[{impl}]",
+         jax.jit(lambda a, b, c: ops.attention(a, b, c, causal=True)),
+         (q, k, v)),
+        # the naive materialized oracle: the contrast row
+        ("attention_reference",
+         jax.jit(lambda a, b, c: ref.attention(a, b, c, causal=True)),
+         (qf, kf, kf)),
+        ("wkv6", jax.jit(lambda a, b, c, d, e: ops.wkv6(a, b, c, d, e)),
+         (r, r, r, lw, u)),
+        ("ssd", jax.jit(lambda a, b, c, d: ops.ssd(a, b, c, d)),
+         (xs, bm, bm, da)),
+        ("codec_compress", jax.jit(lambda a: ops.compress(a, 8)), (flat,)),
+        ("codec_decompress",
+         jax.jit(lambda a, b: ops.decompress(a, b, (262_144,))), (cq, cs)),
+    ]
+
+    rows = []
+    for name, fn, args in cases:
+        cost = _cost_of(fn.lower(*args))
+        jax.block_until_ready(fn(*args))   # compile outside the clock
+        dt = min(_timed_call(fn, args) for _ in range(reps))
+        flops, nbytes = cost["flops"], cost["bytes"]
+        ai = flops / nbytes if nbytes else 0.0
+        ceiling = min(peak, ai * bw) if ai else peak
+        achieved = flops / dt
+        rows.append({
+            "kernel": name, "seq_len": S,
+            "us": round(dt * 1e6, 1),
+            "flops": flops, "bytes": nbytes,
+            "arith_intensity": round(ai, 3),
+            "achieved_gflops": round(achieved / 1e9, 3),
+            "achieved_gbs": round(nbytes / dt / 1e9, 3),
+            "roofline_frac": round(achieved / ceiling, 4) if ceiling
+            else 0.0,
+            "bw_frac": round(nbytes / dt / bw, 4) if bw else 0.0,
+        })
+    return {
+        "machine": {
+            "backend": jax.default_backend(),
+            "peak_gflops": round(peak / 1e9, 2),
+            "mem_bw_gbs": round(bw / 1e9, 2),
+            "calibrated": jax.default_backend() != "tpu",
+            # the bw roof is a DRAM stream; kernels whose working set
+            # fits in cache can legitimately exceed frac 1.0 on CPU
+            "note": "min(peak, AI*bw) ceiling; cache-resident kernels "
+                    "may exceed 1.0 on calibrated (non-TPU) hosts",
+        },
+        "kernels": rows,
+    }
 
 
 def main():

@@ -17,7 +17,17 @@ structured result carries the spec hash that produced it.
 ``engine_lm`` measures the federated-LM path (``data.model=tiny_lm``
 through the model registry) with and without the polyline codec —
 events/sec, bytes-on-wire, and a result hash over the accuracy
-trajectory.
+trajectory — plus the flash-vs-reference attention rows on the
+long-sequence ``tiny_lm_long`` (seq_len 128), where the backends
+actually separate.
+
+``roofline`` runs the measured kernel roofline
+(benchmarks/roofline.kernel_roofline): per-kernel achieved FLOP/s and
+% of the machine roof, into ``JSON_DOC["roofline"]``.  ``--smoke``
+shrinks sizes/reps for the CI push workflow.  ``--json`` *merges* into
+an existing file (records keyed by strategy/scenario), so
+``bench-engine`` and ``bench-roofline`` compose into one
+BENCH_engine.json.
 
 ``--json PATH`` additionally writes the structured results of the
 ``engine*`` targets (events/sec, per-event us, fused-step trace counts,
@@ -290,61 +300,90 @@ def engine_scaled():
     })
 
 
-def _lm_spec(codec=None):
+def _lm_spec(codec=None, *, model="tiny_lm", seq_len=16, backend="auto",
+             total=24):
     """The federated-LM scenario: tiny_lm (models/registry.py) over
-    class-conditional token streams, 24 clients / 3 tiers."""
+    class-conditional token streams, 24 clients / 3 tiers.  The long-seq
+    flash-vs-reference rows pass ``model="tiny_lm_long"``/``seq_len=128``
+    and pin ``backend`` explicitly."""
     return api.ExperimentSpec(
-        data=api.DataSpec(model="tiny_lm", n_clients=24,
+        data=api.DataSpec(model=model, n_clients=24,
                           classes_per_client=2, samples_per_client=24,
-                          vocab_size=64, seq_len=16, seed=9),
+                          vocab_size=64, seq_len=seq_len,
+                          attention_backend=backend, seed=9),
         tiers=api.TierSpec(n_tiers=3, clients_per_round=4, n_unstable=2),
         strategy=api.StrategySpec(name="fedat"),
         transport=api.TransportSpec(codec=codec),
-        engine=api.EngineSpec(total_updates=24, eval_every=12,
+        engine=api.EngineSpec(total_updates=total, eval_every=total // 2,
                               local_epochs=1))
+
+
+def _run_lm_row(spec, tag, extra=None):
+    """Warm + time one federated-LM scenario and append its JSON record
+    (spec hash + result hash over the accuracy trajectory); scenarios
+    sharing a cached env record only their own trace delta, so every
+    record reads "one trace per config" on its own.  Returns the record.
+    """
+    import hashlib
+    n = spec.engine.total_updates
+    before = dict(api.get_env(spec).executor().trace_counts)
+    warm = spec.with_overrides({"engine.total_updates": 3})
+    api.build(warm).run()            # warm: compile the fused step once
+    run = api.build(spec)
+    t0 = time.perf_counter()
+    m = run.run().metrics
+    dt = time.perf_counter() - t0
+    total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
+    emit(f"engine/{tag}", dt / n * 1e6,
+         f"events_per_sec={n / dt:.2f};acc={m.best_acc:.3f}"
+         f";total_mb={total_mb:.2f}")
+    result_hash = hashlib.sha256(
+        np.asarray(m.acc, np.float64).tobytes()).hexdigest()[:12]
+    rec = {
+        "strategy": "fedat", "scenario": tag, "model": spec.data.model,
+        "codec": spec.transport.codec or "none",
+        "attention_backend": spec.data.attention_backend,
+        "seq_len": spec.data.seq_len, "total_updates": n,
+        "events_per_sec": round(n / dt, 3),
+        "us_per_event": round(dt / n * 1e6, 1),
+        "best_acc": round(m.best_acc, 4),
+        "bytes_up": m.bytes_up[-1], "bytes_down": m.bytes_down[-1],
+        "trace_counts": {
+            "/".join(map(str, k)): v - before.get(k, 0)
+            for k, v in run.env.executor().trace_counts.items()
+            if v - before.get(k, 0)},
+        "result_hash": result_hash,
+        "spec_hash": spec.hash(),
+    }
+    rec.update(extra or {})
+    JSON_DOC["results"].append(rec)
+    return rec
 
 
 def engine_lm():
     """Federated LM through the registry path: events/sec and
-    bytes-on-wire with and without the polyline codec.  Each record
-    carries the spec hash and a result hash (sha256 over the accuracy
-    trajectory) so the LM path's output is attributable and comparable
-    across PRs."""
-    import hashlib
+    bytes-on-wire with and without the polyline codec, plus the
+    flash-vs-reference attention rows on the long-sequence tiny_lm
+    (seq_len 128, where the O(S^2) attention term dominates the client
+    step — the short-seq scenario can't separate the backends).  Each
+    record carries the spec hash and a result hash so the LM path's
+    output is attributable and comparable across PRs."""
     for codec in ("none", "polyline:4"):
-        spec = _lm_spec(codec)
-        n = spec.engine.total_updates
-        # both codecs share one cached env; record only this scenario's
-        # trace delta (warm compile + timed run) so each record reads
-        # "one trace per config" on its own
-        before = dict(api.get_env(spec).executor().trace_counts)
-        warm = spec.with_overrides({"engine.total_updates": 3})
-        api.build(warm).run()        # warm: compile the fused step once
-        run = api.build(spec)
-        t0 = time.perf_counter()
-        m = run.run().metrics
-        dt = time.perf_counter() - t0
-        total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
-        tag = f"lm_{codec.replace(':', '_')}"
-        emit(f"engine/{tag}", dt / n * 1e6,
-             f"events_per_sec={n / dt:.2f};acc={m.best_acc:.3f}"
-             f";total_mb={total_mb:.2f}")
-        result_hash = hashlib.sha256(
-            np.asarray(m.acc, np.float64).tobytes()).hexdigest()[:12]
-        JSON_DOC["results"].append({
-            "strategy": "fedat", "scenario": tag, "model": "tiny_lm",
-            "codec": codec, "total_updates": n,
-            "events_per_sec": round(n / dt, 3),
-            "us_per_event": round(dt / n * 1e6, 1),
-            "best_acc": round(m.best_acc, 4),
-            "bytes_up": m.bytes_up[-1], "bytes_down": m.bytes_down[-1],
-            "trace_counts": {
-                "/".join(map(str, k)): v - before.get(k, 0)
-                for k, v in run.env.executor().trace_counts.items()
-                if v - before.get(k, 0)},
-            "result_hash": result_hash,
-            "spec_hash": spec.hash(),
-        })
+        _run_lm_row(_lm_spec(codec), f"lm_{codec.replace(':', '_')}")
+
+    # the attention-backend axis: same long-seq scenario, only the
+    # attention path differs; the headline is the events/sec ratio
+    total = 8 if SMOKE[0] else 16
+    rows = {}
+    for backend in ("reference", "flash"):
+        spec = _lm_spec(model="tiny_lm_long", seq_len=128,
+                        backend=backend, total=total)
+        rows[backend] = _run_lm_row(spec, f"lm_long_{backend}")
+    speedup = (rows["flash"]["events_per_sec"]
+               / rows["reference"]["events_per_sec"])
+    emit("engine/lm_long_flash_speedup", 0.0,
+         f"x_vs_reference={speedup:.2f}")
+    rows["flash"]["speedup_vs_reference"] = round(speedup, 3)
 
 
 def engine_sharded():
@@ -379,6 +418,30 @@ def engine_sharded():
          rec["us_per_event"],
          f"events_per_sec={rec['events_per_sec']:.2f}"
          f";x_vs_single={rel:.2f}")
+
+
+#: set by --smoke: reduced sizes/reps for the CI push workflow
+SMOKE: List[bool] = [False]
+
+
+def roofline():
+    """Kernel roofline (benchmarks/roofline.kernel_roofline): achieved
+    FLOP/s and % of the machine roof per kernel-layer entry point,
+    recorded into the JSON doc next to the engine rows.  The roof is the
+    v5e datasheet on TPU and calibrated in place elsewhere, so CPU CI
+    tracks a real ceiling."""
+    from benchmarks.roofline import kernel_roofline
+    doc = kernel_roofline(smoke=SMOKE[0])
+    m = doc["machine"]
+    for r in doc["kernels"]:
+        emit(f"roofline/{r['kernel']}", r["us"],
+             f"gflops={r['achieved_gflops']};"
+             f"roofline_frac={r['roofline_frac']};"
+             f"bw_frac={r['bw_frac']}")
+    emit("roofline/machine", 0.0,
+         f"backend={m['backend']};peak_gflops={m['peak_gflops']};"
+         f"bw_gbs={m['mem_bw_gbs']}")
+    JSON_DOC["roofline"] = doc
 
 
 def kernels():
@@ -450,9 +513,37 @@ ALL = {
     "engine_scaled": engine_scaled,
     "engine_lm": engine_lm,
     "engine_sharded": engine_sharded,
+    "roofline": roofline,
     "kernels": kernels,
     "trainer": trainer,
 }
+
+#: targets whose structured results --json records
+_JSON_TARGETS = ("engine", "engine_scaled", "engine_lm", "engine_sharded",
+                 "roofline")
+
+
+def _write_json(path: str) -> None:
+    """Write JSON_DOC, merging into an existing document: new records
+    replace old ones with the same (strategy, scenario) key and a fresh
+    roofline section replaces the old one, so ``bench-engine`` and
+    ``bench-roofline`` compose into one BENCH_engine.json instead of
+    clobbering each other's rows."""
+    doc = JSON_DOC
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        key = lambda r: (r.get("strategy"), r.get("scenario"))  # noqa: E731
+        fresh = {key(r) for r in doc["results"]}
+        merged = [r for r in old.get("results", [])
+                  if key(r) not in fresh] + doc["results"]
+        for k, v in doc.items():
+            if k != "results":
+                old[k] = v
+        old["results"] = merged
+        doc = old
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
 
 
 def _pop_flag(argv: List[str], flag: str):
@@ -468,6 +559,9 @@ def main() -> None:
     argv, json_path = _pop_flag(sys.argv[1:], "--json")
     argv, devices = _pop_flag(argv, "--devices")
     argv, scaled_mesh = _pop_flag(argv, "--scaled-mesh")
+    if "--smoke" in argv:
+        argv = [a for a in argv if a != "--smoke"]
+        SMOKE[0] = True
     if devices:
         # must run before anything touches the backend: jax is imported
         # above but stays uninitialized until the first device query
@@ -477,16 +571,14 @@ def main() -> None:
     if scaled_mesh:
         SCALED_MESH[0] = scaled_mesh
     which = argv or [t for t in ALL if t != "engine_sharded"]
-    if json_path and not any(t.startswith("engine") for t in which):
-        sys.exit("--json records the engine targets; add 'engine' (or "
-                 "'engine_scaled'/'engine_sharded') to the requested "
-                 "targets")
+    if json_path and not any(t in _JSON_TARGETS for t in which):
+        sys.exit(f"--json records the structured targets "
+                 f"{_JSON_TARGETS}; add one to the requested targets")
     print("name,us_per_call,derived")
     for name in which:
         ALL[name]()
     if json_path:
-        with open(json_path, "w") as f:
-            json.dump(JSON_DOC, f, indent=2)
+        _write_json(json_path)
         print(f"wrote {json_path}", file=sys.stderr)
 
 

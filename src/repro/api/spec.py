@@ -35,18 +35,22 @@ from typing import Any, Dict, Optional, Tuple
 from repro.compress import transport
 from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 
-#: Version 3 replaced ``data.task`` (a two-value enum) with ``data.model``
-#: (a registry name: models/registry.py) and added the token-data knobs
+#: Version 4 added ``data.attention_backend`` ("auto" | "flash" |
+#: "reference"): which attention path transformer-family models run —
+#: the kernel layer (Pallas flash / blocked-streaming) or the naive
+#: chunked-softmax parity oracle.  Version 3 replaced ``data.task`` (a
+#: two-value enum) with ``data.model`` (a registry name:
+#: models/registry.py) and added the token-data knobs
 #: (``vocab_size``/``seq_len``).  Version 2 added the ``mesh`` section
-#: (client-sharded round executor).  Version-1/2 documents still parse —
-#: a ``task`` key migrates through the deprecation shim
-#: (``image`` -> ``cnn``, ``text`` -> ``logreg``), a missing ``mesh``
-#: section gets the single-device default — but serialization always
-#: emits the current version, so hashes of re-serialized old specs change
-#: (deliberately: the model name is now part of what a result is
-#: attributable to).
-SPEC_VERSION = 3
-_READABLE_VERSIONS = (1, 2, 3)
+#: (client-sharded round executor).  Version-1/2/3 documents still
+#: parse — a ``task`` key migrates through the deprecation shim
+#: (``image`` -> ``cnn``, ``text`` -> ``logreg``), missing
+#: ``mesh``/``attention_backend`` get their defaults — but serialization
+#: always emits the current version, so hashes of re-serialized old
+#: specs change (deliberately: the attention path is now part of what a
+#: result is attributable to).
+SPEC_VERSION = 4
+_READABLE_VERSIONS = (1, 2, 3, 4)
 
 def _resolve_legacy_task(task: Any, existing_model: Optional[str]) -> str:
     """The ``data.task`` deprecation shim shared by ``from_dict`` and
@@ -110,6 +114,11 @@ class DataSpec:
     n_features: int = 128                # features-kind models
     vocab_size: int = 64                 # tokens-kind models
     seq_len: int = 16                    # tokens-kind models
+    #: attention path for transformer-family models: "auto" (flash
+    #: wherever available — the default) | "flash" (kernel layer) |
+    #: "reference" (the chunked-softmax parity oracle).  Non-attention
+    #: models ignore it; it still hashes into provenance.
+    attention_backend: str = "auto"
     seed: int = 0
 
     def validate(self) -> None:
@@ -122,6 +131,10 @@ class DataSpec:
         _require(self.vocab_size >= 2 and self.seq_len >= 2,
                  f"data.vocab_size and data.seq_len must be >= 2, got "
                  f"({self.vocab_size}, {self.seq_len})")
+        from repro.configs.base import ATTENTION_BACKENDS
+        _require(self.attention_backend in ATTENTION_BACKENDS,
+                 f"data.attention_backend must be one of "
+                 f"{ATTENTION_BACKENDS}, got {self.attention_backend!r}")
         _require(self.n_clients >= 1,
                  f"data.n_clients must be >= 1, got {self.n_clients}")
         _require(self.n_classes >= 2,
@@ -478,6 +491,7 @@ class ExperimentSpec:
             samples_per_client=self.data.samples_per_client,
             image_hw=self.data.image_hw, n_features=self.data.n_features,
             vocab_size=self.data.vocab_size, seq_len=self.data.seq_len,
+            attention_backend=self.data.attention_backend,
             n_tiers=self.tiers.n_tiers,
             clients_per_round=self.tiers.clients_per_round,
             local_epochs=self.engine.local_epochs,
@@ -502,6 +516,7 @@ class ExperimentSpec:
                 samples_per_client=sc.samples_per_client,
                 image_hw=sc.image_hw, n_features=sc.n_features,
                 vocab_size=sc.vocab_size, seq_len=sc.seq_len,
+                attention_backend=sc.attention_backend,
                 seed=sc.seed),
             tiers=TierSpec(
                 n_tiers=sc.n_tiers, clients_per_round=sc.clients_per_round,

@@ -18,6 +18,11 @@ def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+#: valid ``ModelConfig.attention_backend`` / ``data.attention_backend``
+#: values (one source of truth for config, spec validation, and docs)
+ATTENTION_BACKENDS = ("auto", "flash", "reference")
+
+
 @dataclass(frozen=True)
 class MoEConfig:
     """Mixture-of-experts sub-config (GShard/Switch-style dense dispatch)."""
@@ -98,6 +103,17 @@ class ModelConfig:
     moe: Optional[MoEConfig] = None
     ssm: Optional[SSMConfig] = None
     rwkv: Optional[RWKVConfig] = None
+
+    # attention backend -----------------------------------------------------
+    #: "auto" | "flash" | "reference".  "flash" routes full-sequence
+    #: attention through the kernel layer (repro.kernels.ops.attention:
+    #: the Pallas flash kernel on TPU, the blocked-streaming jnp path
+    #: elsewhere — causally clipped K/V, no (S, T) logits materialized).
+    #: "reference" keeps the naive chunked softmax path (the bitwise
+    #: parity oracle).  "auto" resolves by availability at trace time
+    #: (models/attention.resolve_attention_backend): flash wherever the
+    #: TP contract allows (tp == 1), reference otherwise.
+    attention_backend: str = "auto"
 
     # training --------------------------------------------------------------
     dtype: str = "bfloat16"

@@ -1,6 +1,7 @@
 """Architecture registry: ``--arch <id>`` resolution for every driver."""
 from __future__ import annotations
 
+from types import SimpleNamespace
 from typing import Callable, Dict, List
 
 from repro.configs.base import ModelConfig
@@ -32,6 +33,9 @@ _MODULES = {
     # CPU-sized dense LM backing the federated ``tiny_lm`` model entry
     # (models/registry.py); also drivable directly: --arch tiny-lm
     "tiny-lm": tiny_lm,
+    # long-sequence variant backing the ``tiny_lm_long`` federated entry
+    # and the flash-vs-reference bench rows (benchmarks/run.py)
+    "tiny-lm-long": SimpleNamespace(config=tiny_lm.long, smoke=tiny_lm.long),
 }
 
 ARCH_IDS: List[str] = list(_MODULES)

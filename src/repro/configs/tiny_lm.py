@@ -38,5 +38,16 @@ def config() -> ModelConfig:
         attn_chunk=64, remat=False)
 
 
+def long() -> ModelConfig:
+    """The long-sequence federated tiny LM (arch id ``tiny-lm-long``):
+    same weights-shape as ``tiny-lm`` but tuned for seq_len ~128, where
+    the O(S^2) attention term dominates the step — this is the config the
+    engine_lm flash-vs-reference bench rows run (benchmarks/run.py).
+    ``attn_chunk=32`` keeps both backends on their chunked paths so the
+    comparison is streaming-vs-streaming, not streaming-vs-materialized.
+    """
+    return config().replace(name="tiny-lm-long", attn_chunk=32)
+
+
 def smoke() -> ModelConfig:
     return config()

@@ -42,6 +42,11 @@ class SimConfig:
     n_features: int = 128
     vocab_size: int = 64           # tokens-kind models: vocabulary size
     seq_len: int = 16              # tokens-kind models: sequence length
+    #: attention path for transformer-family models: "auto" | "flash" |
+    #: "reference" (configs/base.py ATTENTION_BACKENDS).  "flash" routes
+    #: every client step through the kernel layer; "reference" keeps the
+    #: chunked-softmax parity oracle; "auto" = flash wherever available.
+    attention_backend: str = "auto"
     n_tiers: int = 5
     clients_per_round: int = 10
     local_epochs: int = 3
@@ -107,7 +112,8 @@ class SimEnv:
             sc.model, model_registry.DataDims(
                 n_classes=sc.n_classes, image_hw=sc.image_hw,
                 n_features=sc.n_features, vocab_size=sc.vocab_size,
-                seq_len=sc.seq_len))
+                seq_len=sc.seq_len,
+                attention_backend=sc.attention_backend))
         self.ds = make_federated(
             task=self.model.data_kind, n_clients=sc.n_clients,
             n_classes=sc.n_classes,

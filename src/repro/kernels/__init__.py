@@ -1,3 +1,42 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Kernel layer: Pallas TPU kernels + jnp fallbacks behind jit'd wrappers.
+
+The stable public surface is re-exported here — call sites outside this
+package (models/attention.py, compress/transport.py, benchmarks) import
+from ``repro.kernels``, not the implementation modules:
+
+  * :func:`attention` — one entry point for fast attention (``impl=``
+    auto | pallas | pallas_interpret | blocked), with
+    :func:`flash_attention` (the Pallas kernel wrapper),
+    :func:`blocked_attention` (the streaming jnp path), and
+    :func:`default_attention_impl` (what ``auto`` resolves to here).
+  * :func:`compress` / :func:`decompress` — the polyline codec's blocked
+    quantizer (compress/transport.py rides these).
+  * :func:`wkv6` / :func:`ssd` — the RWKV-6 and Mamba-2 chunked scans.
+  * :mod:`ref` — the naive jnp oracles every kernel is tested against.
+"""
+from repro.kernels import ref
+from repro.kernels.ops import (
+    attention,
+    blocked_attention,
+    compress,
+    decompress,
+    default_attention_impl,
+    flash_attention,
+    ssd,
+    wkv6,
+)
+
+__all__ = [
+    "attention",
+    "blocked_attention",
+    "compress",
+    "decompress",
+    "default_attention_impl",
+    "flash_attention",
+    "ref",
+    "ssd",
+    "wkv6",
+]

@@ -22,11 +22,33 @@ from typing import Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTENTION_BACKENDS, ModelConfig
+from repro.kernels import ops as kops
 from repro.models.common import PSpec, apply_rope
 from repro.runtime import sharding as shd
 
 NEG_INF = -1e9
+
+
+def resolve_attention_backend(cfg: ModelConfig, tp: int) -> str:
+    """Resolve ``cfg.attention_backend`` to the backend actually used.
+
+    ``reference`` is the naive chunked softmax path below (the bitwise
+    engine-parity oracle).  ``flash`` routes through the kernel layer
+    (:func:`repro.kernels.ops.attention`) — but only under the tp == 1
+    contract: the reference path owns the padded-head / kv_seq sharding
+    story (DESIGN.md §TP-scheme), so with a model axis both ``auto`` and
+    an explicit ``flash`` fall back to reference rather than hand GSPMD a
+    repeat/transpose it would ring-allgather.
+    """
+    be = getattr(cfg, "attention_backend", "auto")
+    if be not in ATTENTION_BACKENDS:
+        raise ValueError(
+            f"unknown attention_backend {be!r}; expected one of "
+            f"{ATTENTION_BACKENDS}")
+    if be == "reference" or tp > 1:
+        return "reference"
+    return "flash"
 
 
 # ---------------------------------------------------------------------------
@@ -126,6 +148,20 @@ def full_attention(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
     q, k, v = _project_qkv(cfg, p, x, positions, tp)
     C = min(cfg.attn_chunk, S)
     W = cfg.swa_window
+
+    if resolve_attention_backend(cfg, tp) == "flash":
+        # kernel-layer contract: q (B, S, H, hd), k/v (B, S, kv, hd).
+        # q's (kv, G) grouping flattens kv-major, matching the KV-head
+        # expansion order inside the kernel wrappers.
+        qf = q.reshape(B, S, -1, cfg.head_dim)
+        impl = "auto"
+        if prefix_len and kops.default_attention_impl() != "blocked":
+            impl = "blocked"  # the Pallas kernel has no prefix-LM mask
+        out = kops.attention(qf, k, v, causal=cfg.causal, window=W,
+                             impl=impl, block=C, prefix_len=prefix_len)
+        out = out.reshape(B, S, -1)
+        out = shd.shard(out, "batch", None, "tp")
+        return jnp.einsum("bsh,hd->bsd", out, p["wo"])
 
     def block_mask(pos_q, pos_kv):
         m = jnp.ones((pos_q.shape[0], pos_kv.shape[0]), bool)

@@ -51,6 +51,10 @@ class DataDims:
     n_features: int = 128
     vocab_size: int = 64
     seq_len: int = 16
+    #: attention path for transformer-family models ("auto" | "flash" |
+    #: "reference", configs/base.py ATTENTION_BACKENDS); non-attention
+    #: models ignore it
+    attention_backend: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,7 +159,8 @@ def _make_logreg(dims: DataDims) -> FLModel:
 # tiny_lm: the LM facade on the federated path
 # ---------------------------------------------------------------------------
 
-def _make_tiny_lm(dims: DataDims) -> FLModel:
+def _make_tiny_lm(dims: DataDims, arch: str = "tiny-lm",
+                  name: str = "tiny_lm") -> FLModel:
     """A tiny dense causal LM (``configs/tiny_lm.py``) trained federated
     on class-conditional token streams.
 
@@ -165,11 +170,18 @@ def _make_tiny_lm(dims: DataDims) -> FLModel:
     forward pass is :func:`repro.models.transformer.forward_train`, and
     the objective is next-token cross-entropy averaged per sample then
     mask-weighted across the client's (padded) sample slots.
+
+    ``dims.attention_backend`` lands on the bound :class:`ModelConfig`,
+    so a spec's ``data.attention_backend`` picks the attention path
+    (flash kernel layer vs. the reference parity oracle) for every
+    client step in the federated run.
     """
     from repro.configs.registry import get_config
     from repro.models import lm, transformer
 
-    cfg = get_config("tiny-lm").replace(vocab_size=dims.vocab_size)
+    cfg = get_config(arch).replace(
+        vocab_size=dims.vocab_size,
+        attention_backend=dims.attention_backend)
 
     def apply(params, x):
         """x: (B, S) int32 tokens -> logits (B, S, V)."""
@@ -198,16 +210,24 @@ def _make_tiny_lm(dims: DataDims) -> FLModel:
         return jnp.sum(ok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
 
     return FLModel(
-        name="tiny_lm", data_kind="tokens",
+        name=name, data_kind="tokens",
         init_params=lambda key: lm.init_params(
             cfg, key, tp=1, dtype=jnp.float32),
         apply=apply, loss=loss, eval_metrics=eval_metrics,
         batch_shape=(dims.seq_len,), batch_dtype=np.int32)
 
 
+def _make_tiny_lm_long(dims: DataDims) -> FLModel:
+    """The long-sequence tiny LM (arch ``tiny-lm-long``): same stack,
+    attn_chunk tuned for seq_len ~128 — the config where flash-vs-
+    reference attention shows up in end-to-end events/s."""
+    return _make_tiny_lm(dims, arch="tiny-lm-long", name="tiny_lm_long")
+
+
 register_model("cnn", _make_cnn)
 register_model("logreg", _make_logreg)
 register_model("tiny_lm", _make_tiny_lm)
+register_model("tiny_lm_long", _make_tiny_lm_long)
 
 #: the ``task`` values spec versions 1/2 used, mapped to registry names
 #: (the ``data.task`` deprecation shim in api/spec.py resolves through

@@ -107,8 +107,11 @@ def global_norm(tree) -> jax.Array:
 def cosine_schedule(base_lr: float, warmup: int, total: int,
                     min_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
     def fn(step):
+        # Warmup counts from step+1: schedule(0) > 0, so the very first
+        # optimizer step is never a silent no-op that still consumes Adam's
+        # bias-correction count.
         step = step.astype(jnp.float32)
-        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        warm = jnp.minimum((step + 1.0) / jnp.maximum(warmup, 1), 1.0)
         prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
         cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
         return base_lr * warm * cos

@@ -49,7 +49,7 @@ def _lm_spec(**extra):
 
 def test_registry_entries_and_errors():
     assert model_registry.registered_models() == ["cnn", "logreg",
-                                                  "tiny_lm"]
+                                                  "tiny_lm", "tiny_lm_long"]
     dims = model_registry.DataDims()
     for name in model_registry.registered_models():
         m = model_registry.build_model(name, dims)
@@ -83,7 +83,7 @@ def test_old_documents_parse_and_migrate(version, task, model):
            "engine": {"total_updates": 4}}
     spec = api.ExperimentSpec.from_json(json.dumps(doc))
     assert spec.data.model == model
-    assert spec.to_dict()["spec_version"] == api.SPEC_VERSION == 3
+    assert spec.to_dict()["spec_version"] == api.SPEC_VERSION == 4
     assert "task" not in spec.to_dict()["data"]
     spec.validate()
 

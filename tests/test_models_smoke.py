@@ -85,7 +85,7 @@ def test_decode_matches_teacher_forcing(arch):
 #: archs with no published size to check against (CPU-sized test models);
 #: every *real* arch must appear in the advertised dict below — a new
 #: production arch missing from it is a hard KeyError, not a skip
-CPU_SIZED_ARCHS = {"tiny-lm"}
+CPU_SIZED_ARCHS = {"tiny-lm", "tiny-lm-long"}
 
 
 @pytest.mark.parametrize("arch", ARCHS)

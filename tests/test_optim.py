@@ -56,7 +56,7 @@ def test_grad_clip():
 def test_cosine_schedule_shape():
     fn = cosine_schedule(1.0, warmup=10, total=100)
     vals = [float(fn(jnp.asarray(s))) for s in [0, 5, 10, 50, 100]]
-    assert vals[0] == 0.0
+    assert 0.0 < vals[0] <= 0.1 + 1e-6  # warmup starts nonzero: no no-op step
     assert np.isclose(vals[2], 1.0, atol=0.02)
     assert vals[3] < vals[2]
     assert np.isclose(vals[4], 0.1, atol=0.02)  # min_frac floor
