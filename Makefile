@@ -3,8 +3,8 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-kernels bench-smoke bench-engine bench-roofline \
-	smoke-example smoke-lm docs check-docs
+.PHONY: test test-kernels test-faultplane bench-smoke bench-engine \
+	bench-roofline smoke-example smoke-lm smoke-fault docs check-docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -14,6 +14,12 @@ test:
 # (flash vs reference through the model and federated layers)
 test-kernels:
 	$(PY) -m pytest -q tests/test_kernels.py tests/test_attention_backend.py
+
+# the fault plane as a required job of its own: churn/blackout/gate
+# units + the bitwise crash-resume suite (including the SIGKILL chaos
+# subprocess test)
+test-faultplane:
+	$(PY) -m pytest -q tests/test_faultplane.py tests/test_crash_resume.py
 
 # regenerate the introspected ExperimentSpec reference (docs/SPEC.md)
 docs:
@@ -39,6 +45,21 @@ smoke-lm:
 	    --set engine.local_epochs=1 --set engine.total_updates=2 \
 	    --set engine.eval_every=2
 
+# 2-round run under the full fault plane through the CLI: client churn,
+# a poisoned uplink behind the validation gate, and a tier blackout
+# (CI runs this on every push)
+smoke-fault:
+	$(PY) -m repro.api.cli \
+	    --set data.n_clients=8 --set data.samples_per_client=12 \
+	    --set data.image_hw=8 --set tiers.n_tiers=2 \
+	    --set tiers.clients_per_round=2 --set tiers.n_unstable=0 \
+	    --set engine.local_epochs=1 --set engine.total_updates=2 \
+	    --set engine.eval_every=2 \
+	    --set faults.churn_rate=0.5 --set 'faults.churn_window=[1,40]' \
+	    --set faults.churn_downtime=10 --set faults.nan_rate=0.5 \
+	    --set faults.blackouts=1 --set 'faults.blackout_window=[1,20]' \
+	    --set faults.blackout_duration=10
+
 bench-smoke:
 	$(PY) -m benchmarks.run codec codec_e2e kernels
 
@@ -53,8 +74,9 @@ bench-roofline:
 # engine hot-path throughput (events/sec per strategy) + the scale axis
 # (512-client scenario single-device and client-sharded on a forced
 # multi-device host mesh, subprocess) + the federated-LM path
-# (tiny_lm with/without the polyline codec) + machine-readable JSON for
-# cross-PR perf tracking
+# (tiny_lm with/without the polyline codec) + the fault-plane
+# degradation curve (0/5%/20% fault pressure) + machine-readable JSON
+# for cross-PR perf tracking
 bench-engine:
 	$(PY) -m benchmarks.run engine engine_scaled engine_lm \
-	    engine_sharded --json BENCH_engine.json
+	    engine_faults engine_sharded --json BENCH_engine.json

@@ -21,6 +21,11 @@ trajectory — plus the flash-vs-reference attention rows on the
 long-sequence ``tiny_lm_long`` (seq_len 128), where the backends
 actually separate.
 
+``engine_faults`` measures the fault-plane degradation curve (FedAT at
+0/5%/20% fault pressure: churn, poisoned uplinks, a tier blackout) —
+events/sec and accuracy per level, with the zero-fault row cross-checked
+bitwise against a second run.
+
 ``roofline`` runs the measured kernel roofline
 (benchmarks/roofline.kernel_roofline): per-kernel achieved FLOP/s and
 % of the machine roof, into ``JSON_DOC["roofline"]``.  ``--smoke``
@@ -386,6 +391,63 @@ def engine_lm():
     rows["flash"]["speedup_vs_reference"] = round(speedup, 3)
 
 
+def engine_faults():
+    """Fault-plane degradation curve: FedAT on the bench scenario at
+    increasing fault pressure — 0 (the zero-fault baseline), 5% client
+    churn, and 20% churn + poisoned uplinks + a tier blackout.  Records
+    events/sec (the fault plane must not tax the hot loop) and the
+    accuracy degradation; the zero-fault row is additionally run twice
+    and cross-checked bitwise (trajectory *and* bytes-on-wire), pinning
+    the spec-level side of the zero-fault parity contract."""
+    total = 20 if SMOKE[0] else 60
+    base = _spec("fedat", seed=7, total=total, eval_every=total // 4)
+    # windows sit inside the scenario's actual sim-time span (~13-50s of
+    # simulated time for 60 updates under the paper delay bands)
+    levels = (
+        ("faults_0", {}),
+        ("faults_5", {"faults.churn_rate": 0.05,
+                      "faults.churn_window": [5.0, 45.0],
+                      "faults.churn_downtime": 15.0}),
+        ("faults_20", {"faults.churn_rate": 0.20,
+                       "faults.churn_window": [5.0, 45.0],
+                       "faults.churn_downtime": 15.0,
+                       "faults.nan_rate": 0.10,
+                       "faults.blackouts": 1,
+                       "faults.blackout_window": [10.0, 35.0],
+                       "faults.blackout_duration": 8.0}),
+    )
+    for tag, overrides in levels:
+        spec = base.with_overrides(overrides) if overrides else base
+        warm = spec.with_overrides({"engine.total_updates": 5})
+        api.build(warm).run()        # warm: compile the (gated) step once
+        run = api.build(spec)
+        t0 = time.perf_counter()
+        m = run.run().metrics
+        dt = time.perf_counter() - t0
+        total_mb = (m.bytes_up[-1] + m.bytes_down[-1]) / 1e6
+        emit(f"engine/{tag}", dt / total * 1e6,
+             f"events_per_sec={total / dt:.2f};acc={m.best_acc:.3f}"
+             f";final_acc={m.acc[-1]:.3f};total_mb={total_mb:.1f}")
+        rec = {
+            "strategy": "fedat", "scenario": tag,
+            "total_updates": total,
+            "events_per_sec": round(total / dt, 3),
+            "us_per_event": round(dt / total * 1e6, 1),
+            "best_acc": round(m.best_acc, 4),
+            "final_acc": round(m.acc[-1], 4),
+            "total_mb": round(total_mb, 3),
+            "spec_hash": spec.hash(),
+        }
+        if tag == "faults_0":
+            # the degradation curve's origin doubles as a parity pin
+            m2 = api.build(spec).run().metrics
+            rec["zero_fault_bitwise"] = (
+                m.times == m2.times and m.acc == m2.acc
+                and m.bytes_up == m2.bytes_up
+                and m.bytes_down == m2.bytes_down)
+        JSON_DOC["results"].append(rec)
+
+
 def engine_sharded():
     """The scaled scenario under a multi-device host mesh, measured in a
     subprocess with ``--xla_force_host_platform_device_count`` (the only
@@ -512,6 +574,7 @@ ALL = {
     "engine": engine,
     "engine_scaled": engine_scaled,
     "engine_lm": engine_lm,
+    "engine_faults": engine_faults,
     "engine_sharded": engine_sharded,
     "roofline": roofline,
     "kernels": kernels,
@@ -519,8 +582,8 @@ ALL = {
 }
 
 #: targets whose structured results --json records
-_JSON_TARGETS = ("engine", "engine_scaled", "engine_lm", "engine_sharded",
-                 "roofline")
+_JSON_TARGETS = ("engine", "engine_scaled", "engine_lm", "engine_faults",
+                 "engine_sharded", "roofline")
 
 
 def _write_json(path: str) -> None:

@@ -16,7 +16,11 @@ params (checkpoint/ckpt.py: atomic, integrity-hashed) next to a
 ``build(spec, resume_from=dir)`` restores those params as the run's
 initial model **iff** the saved spec hash matches the current spec's
 (mismatch is an actionable :class:`SpecError` — results must stay
-attributable to exactly one configuration).
+attributable to exactly one configuration).  Independently, a spec with
+``faults.checkpoint_every > 0`` persists *full engine snapshots* under
+``<checkpoint_dir>/engine`` as the run progresses, and
+``Run.run(resume_engine=True)`` replays the remainder of a killed run
+bitwise (DESIGN.md §Fault-plane) — same hash guard, same SpecError.
 """
 from __future__ import annotations
 
@@ -27,7 +31,8 @@ import json
 import os
 from typing import Any, Callable, Dict, Iterable, List, Optional
 
-from repro.api.spec import ExperimentSpec, SpecError
+from repro.api.spec import ExperimentSpec, FaultSpec, SpecError
+from repro.core import faults as faults_mod
 from repro.core import strategies
 from repro.core.engine import EngineConfig, ServerStrategy, run_engine
 from repro.core.scheduler import Metrics
@@ -76,6 +81,55 @@ def _make_strategy(spec: ExperimentSpec) -> ServerStrategy:
     return factory(**kwargs)
 
 
+def _fault_config(fs: FaultSpec) -> Optional[faults_mod.FaultConfig]:
+    """Engine-plane fault knobs from the spec's ``faults`` section, or
+    None when every knob is off — a zero-fault spec must produce an
+    EngineConfig identical to the pre-fault-plane engine (the engine-
+    parity oracle pins this).  Churn is *not* here: it shapes client
+    availability, so it rides the environment (``to_sim_config``)."""
+    fc = faults_mod.FaultConfig(
+        blackouts=fs.blackouts,
+        blackout_duration=fs.blackout_duration,
+        blackout_window=tuple(fs.blackout_window),
+        nan_rate=fs.nan_rate,
+        update_clip=fs.update_clip,
+        checkpoint_every=fs.checkpoint_every,
+        seed=fs.seed)
+    return fc if fc.active else None
+
+
+def _engine_ckpt_dir(checkpoint_dir: str, spec: ExperimentSpec,
+                     resume: bool) -> str:
+    """The engine-state checkpoint directory under ``checkpoint_dir``,
+    guarded by a spec-hash sidecar: resuming an engine snapshot under a
+    *different* spec would silently splice two configurations into one
+    trajectory, so a mismatch is an actionable :class:`SpecError`."""
+    eng = os.path.join(checkpoint_dir, "engine")
+    os.makedirs(eng, exist_ok=True)
+    sidecar = os.path.join(eng, "spec.json")
+    if os.path.exists(sidecar):
+        with open(sidecar) as f:
+            saved = json.load(f)
+        if saved.get("spec_hash") != spec.hash():
+            raise SpecError(
+                f"engine checkpoint dir {eng!r} holds snapshots written by "
+                f"spec {saved.get('spec_hash')} but the current spec hashes "
+                f"to {spec.hash()}; point checkpoint_dir somewhere fresh or "
+                f"load the matching spec from {sidecar!r}")
+    elif resume:
+        raise SpecError(
+            f"resume_engine=True but {eng!r} has no spec.json — nothing "
+            f"was ever checkpointed there (run with checkpoint_dir= and "
+            f"faults.checkpoint_every > 0 first)")
+    else:
+        tmp = sidecar + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"spec_hash": spec.hash(), "spec": spec.to_dict()},
+                      f, indent=2)
+        os.replace(tmp, sidecar)
+    return eng
+
+
 @dataclasses.dataclass
 class Result:
     """One finished run: metrics + the exact configuration that made them."""
@@ -111,18 +165,35 @@ class Run:
     initial_params: Optional[Any] = None
 
     def run(self, on_eval: Optional[Callable[[dict], None]] = None,
-            checkpoint_dir: Optional[str] = None) -> Result:
+            checkpoint_dir: Optional[str] = None,
+            resume_engine: bool = False) -> Result:
         """Execute the event loop; ``on_eval`` streams each recorded eval
         point (dict with time/round/acc/acc_var/bytes_up/bytes_down).
         ``checkpoint_dir`` saves the final global params + the producing
         spec (hash-stamped) there, resumable via
-        ``build(spec, resume_from=checkpoint_dir)``."""
+        ``build(spec, resume_from=checkpoint_dir)``.  With
+        ``faults.checkpoint_every > 0`` it additionally persists full
+        engine snapshots under ``<checkpoint_dir>/engine``;
+        ``resume_engine=True`` restores the newest one and replays the
+        rest of the run to a bitwise-identical trajectory (the crash-
+        resume path, DESIGN.md §Fault-plane)."""
+        eng_dir = None
+        if checkpoint_dir is not None and self.spec.faults.checkpoint_every:
+            eng_dir = _engine_ckpt_dir(checkpoint_dir, self.spec,
+                                       resume_engine)
+        elif resume_engine:
+            raise SpecError(
+                "resume_engine=True needs checkpoint_dir= and "
+                "faults.checkpoint_every > 0 — there is no engine "
+                "snapshot to resume from otherwise")
         params0 = self.env.params0
         if self.initial_params is not None:
             self.env.params0 = self.initial_params
         try:
             metrics = run_engine(self.env, self.strategy, self.cfg,
-                                 on_record=on_eval)
+                                 on_record=on_eval,
+                                 checkpoint_dir=eng_dir,
+                                 resume=resume_engine)
         finally:
             self.env.params0 = params0
         if checkpoint_dir is not None:
@@ -219,7 +290,8 @@ def build(spec: ExperimentSpec, env: Optional[SimEnv] = None,
                          eval_every=spec.engine.eval_every,
                          seed=spec.engine.seed,
                          retier_every=spec.tiers.retier_every,
-                         retier_drift=spec.tiers.retier_drift),
+                         retier_drift=spec.tiers.retier_drift,
+                         faults=_fault_config(spec.faults)),
         initial_params=initial)
 
 

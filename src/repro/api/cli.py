@@ -22,6 +22,9 @@ same engine/codec/mesh stack (``data.task=image|text`` still works as a
 deprecated alias for the paper models).  ``--checkpoint-dir`` saves the
 final params + spec hash after a single run; ``--resume-from`` restores
 such a checkpoint as the initial model (the saved spec hash must match).
+With ``faults.checkpoint_every > 0`` the run also snapshots full engine
+state under ``<checkpoint-dir>/engine``, and ``--resume`` replays a
+killed run from the newest snapshot to a bitwise-identical trajectory.
 
 Client-sharded execution: ``--set mesh.kind=host`` runs the fused round
 step sharded over however many local devices exist (force N CPU devices
@@ -97,12 +100,19 @@ def main(argv: List[str] = None) -> List[api.Result]:
     ap.add_argument("--resume-from", metavar="DIR",
                     help="restore initial params from a --checkpoint-dir "
                          "checkpoint whose spec hash matches")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed run from its newest engine "
+                         "snapshot under <checkpoint-dir>/engine (needs "
+                         "--checkpoint-dir and faults.checkpoint_every > 0)")
     ap.add_argument("--print-spec", action="store_true",
                     help="print the resolved base spec and exit")
     args = ap.parse_args(argv)
     if (args.checkpoint_dir or args.resume_from) and args.sweeps:
         ap.error("--checkpoint-dir/--resume-from apply to single runs, "
                  "not sweeps")
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume needs --checkpoint-dir (engine snapshots live "
+                 "under <checkpoint-dir>/engine)")
 
     try:
         if args.spec:
@@ -133,7 +143,8 @@ def main(argv: List[str] = None) -> List[api.Result]:
         else:
             print(f"spec {spec.hash()}", flush=True)
             res = api.build(spec, resume_from=args.resume_from).run(
-                checkpoint_dir=args.checkpoint_dir)
+                checkpoint_dir=args.checkpoint_dir,
+                resume_engine=args.resume)
             _print_row(res)
             results = [res]
     except api.SpecError as e:

@@ -10,6 +10,8 @@ server policy — from five nested sections:
   * :class:`TransportSpec` the link codec by registry string
   * :class:`EngineSpec`    budget, eval cadence, seed, local-training knobs
   * :class:`MeshSpec`      device mesh for the client-sharded round step
+  * :class:`FaultSpec`     deterministic fault plane (churn, blackouts,
+    poisoned uplinks, crash-resume cadence)
 
 The spec is plain data: ``to_dict``/``from_dict`` round-trip through JSON
 (``from_dict`` rejects unknown fields with the valid-field list), and
@@ -35,6 +37,10 @@ from typing import Any, Dict, Optional, Tuple
 from repro.compress import transport
 from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 
+#: Version 5 added the ``faults`` section (deterministic fault plane:
+#: transient client churn, tier blackouts, uplink poisoning + the
+#: server-side validation gate, crash-resume checkpoint cadence — all
+#: drawn from a dedicated fault rng stream, DESIGN.md §Fault-plane).
 #: Version 4 added ``data.attention_backend`` ("auto" | "flash" |
 #: "reference"): which attention path transformer-family models run —
 #: the kernel layer (Pallas flash / blocked-streaming) or the naive
@@ -42,15 +48,16 @@ from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 #: two-value enum) with ``data.model`` (a registry name:
 #: models/registry.py) and added the token-data knobs
 #: (``vocab_size``/``seq_len``).  Version 2 added the ``mesh`` section
-#: (client-sharded round executor).  Version-1/2/3 documents still
+#: (client-sharded round executor).  Version-1/2/3/4 documents still
 #: parse — a ``task`` key migrates through the deprecation shim
 #: (``image`` -> ``cnn``, ``text`` -> ``logreg``), missing
-#: ``mesh``/``attention_backend`` get their defaults — but serialization
-#: always emits the current version, so hashes of re-serialized old
-#: specs change (deliberately: the attention path is now part of what a
-#: result is attributable to).
-SPEC_VERSION = 4
-_READABLE_VERSIONS = (1, 2, 3, 4)
+#: ``mesh``/``attention_backend``/``faults`` get their defaults (a
+#: defaulted ``faults`` section is exactly the zero-fault engine) — but
+#: serialization always emits the current version, so hashes of
+#: re-serialized old specs change (deliberately: the fault scenario is
+#: now part of what a result is attributable to).
+SPEC_VERSION = 5
+_READABLE_VERSIONS = (1, 2, 3, 4, 5)
 
 def _resolve_legacy_task(task: Any, existing_model: Optional[str]) -> str:
     """The ``data.task`` deprecation shim shared by ``from_dict`` and
@@ -334,13 +341,90 @@ class MeshSpec:
                 f"actual device count.")
 
 
+@dataclasses.dataclass
+class FaultSpec:
+    """Deterministic fault plane (DESIGN.md §Fault-plane).
+
+    Every fault draw comes from a dedicated rng stream seeded by
+    ``faults.seed`` (core/faults.py), so the all-defaults section is
+    *exactly* the zero-fault engine — bitwise identical trajectories,
+    pinned by the engine-parity oracle.  Churn shapes the environment's
+    availability windows; blackouts/poisoning/clipping act inside the
+    engine loop; ``checkpoint_every`` enables bitwise crash-resume.
+    """
+    #: fraction of clients subject to transient availability churn
+    #: (down-windows on top of the permanent-dropout schedule); 0 = off
+    churn_rate: float = 0.0
+    #: down-windows per churned client
+    churn_events: int = 2
+    #: mean down-window duration in sim seconds (exponential)
+    churn_downtime: float = 30.0
+    #: down-window onsets drawn uniformly in this (lo, hi) sim-time window
+    churn_window: Tuple[float, float] = (50.0, 400.0)
+    #: number of tier blackout events over the run (tiered strategies:
+    #: the tier leaves Eq. 3 while dark and bootstraps from the global
+    #: model on return; strategies without a tier model ignore them)
+    blackouts: int = 0
+    #: blackout duration in sim seconds
+    blackout_duration: float = 60.0
+    #: blackout onsets drawn uniformly in this (lo, hi) sim-time window
+    blackout_window: Tuple[float, float] = (50.0, 400.0)
+    #: per-round probability that one client's decoded uplink is poisoned
+    #: to NaN; any nonzero value (or update_clip) compiles the round-based
+    #: strategies' server-side validation gate (core/steps.py)
+    nan_rate: float = 0.0
+    #: L2 norm the gate clips each client's update delta to (0 = off)
+    update_clip: float = 0.0
+    #: checkpoint full engine state every N committed updates through
+    #: checkpoint/ckpt.py (0 = off); a resumed run replays bitwise
+    checkpoint_every: int = 0
+    #: the dedicated fault-plane rng stream seed
+    seed: int = 0
+
+    def __post_init__(self):
+        self.churn_window = tuple(float(v) for v in self.churn_window)
+        self.blackout_window = tuple(float(v) for v in self.blackout_window)
+
+    def validate(self) -> None:
+        _require(0 <= self.churn_rate <= 1,
+                 f"faults.churn_rate must be in [0, 1], "
+                 f"got {self.churn_rate}")
+        _require(self.churn_events >= 0,
+                 f"faults.churn_events must be >= 0, "
+                 f"got {self.churn_events}")
+        _require(self.churn_downtime > 0,
+                 f"faults.churn_downtime must be > 0, "
+                 f"got {self.churn_downtime}")
+        lo, hi = self.churn_window
+        _require(0 <= lo <= hi,
+                 f"faults.churn_window must satisfy 0 <= lo <= hi, "
+                 f"got ({lo}, {hi})")
+        _require(self.blackouts >= 0,
+                 f"faults.blackouts must be >= 0, got {self.blackouts}")
+        _require(self.blackout_duration > 0,
+                 f"faults.blackout_duration must be > 0, "
+                 f"got {self.blackout_duration}")
+        lo, hi = self.blackout_window
+        _require(0 <= lo <= hi,
+                 f"faults.blackout_window must satisfy 0 <= lo <= hi, "
+                 f"got ({lo}, {hi})")
+        _require(0 <= self.nan_rate <= 1,
+                 f"faults.nan_rate must be in [0, 1], got {self.nan_rate}")
+        _require(self.update_clip >= 0,
+                 f"faults.update_clip must be >= 0 (0 = off), "
+                 f"got {self.update_clip}")
+        _require(self.checkpoint_every >= 0,
+                 f"faults.checkpoint_every must be >= 0 (0 = off), "
+                 f"got {self.checkpoint_every}")
+
+
 # ---------------------------------------------------------------------------
 # the composed spec
 # ---------------------------------------------------------------------------
 
 _SECTIONS = {"data": DataSpec, "tiers": TierSpec, "strategy": StrategySpec,
              "transport": TransportSpec, "engine": EngineSpec,
-             "mesh": MeshSpec}
+             "mesh": MeshSpec, "faults": FaultSpec}
 
 
 @dataclasses.dataclass
@@ -352,6 +436,7 @@ class ExperimentSpec:
         default_factory=TransportSpec)
     engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
     mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
+    faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
 
     # -- validation -----------------------------------------------------
     def validate(self) -> "ExperimentSpec":
@@ -361,6 +446,7 @@ class ExperimentSpec:
         self.transport.validate()
         self.engine.validate()
         self.mesh.validate(self.tiers.clients_per_round)
+        self.faults.validate()
         return self
 
     # -- serialization --------------------------------------------------
@@ -369,6 +455,8 @@ class ExperimentSpec:
         d["tiers"]["delay_bands"] = [list(b)
                                      for b in self.tiers.delay_bands]
         d["tiers"]["dropout_window"] = list(self.tiers.dropout_window)
+        d["faults"]["churn_window"] = list(self.faults.churn_window)
+        d["faults"]["blackout_window"] = list(self.faults.blackout_window)
         d["spec_version"] = SPEC_VERSION
         return d
 
@@ -429,15 +517,22 @@ class ExperimentSpec:
     def env_dict(self) -> Dict[str, Any]:
         """The sub-dict that determines :class:`SimEnv` materialization
         (used as the environment cache key): data + tiers minus the
-        engine-owned re-tiering cadence, plus the local-training knobs."""
+        engine-owned re-tiering cadence, the local-training knobs, and
+        the fault plane's *churn* knobs (availability windows live on the
+        environment; the engine-plane fault knobs don't re-materialize
+        it)."""
         d = self.to_dict()
         tiers = d["tiers"]
         tiers.pop("retier_every"), tiers.pop("retier_drift")
         eng = d["engine"]
         local = {k: eng[k] for k in ("local_epochs", "batch_size", "lr",
                                      "prox_lambda")}
+        f = d["faults"]
+        churn = {k: f[k] for k in ("churn_rate", "churn_events",
+                                   "churn_downtime", "churn_window",
+                                   "seed")}
         return {"data": d["data"], "tiers": tiers, "local": local,
-                "mesh": d["mesh"]}
+                "mesh": d["mesh"], "churn": churn}
 
     def env_hash(self) -> str:
         return hashlib.sha256(json.dumps(
@@ -502,7 +597,12 @@ class ExperimentSpec:
             partitioner=self.data.partitioner,
             delay_bands=self.tiers.delay_bands,
             dropout_window=self.tiers.dropout_window,
-            mesh=self.mesh.to_name(), shard_tiers=self.mesh.shard_tiers)
+            mesh=self.mesh.to_name(), shard_tiers=self.mesh.shard_tiers,
+            churn_rate=self.faults.churn_rate,
+            churn_events=self.faults.churn_events,
+            churn_downtime=self.faults.churn_downtime,
+            churn_window=self.faults.churn_window,
+            fault_seed=self.faults.seed)
 
     @classmethod
     def from_sim_config(cls, sc: SimConfig) -> "ExperimentSpec":
@@ -526,4 +626,8 @@ class ExperimentSpec:
             engine=EngineSpec(
                 local_epochs=sc.local_epochs, batch_size=sc.batch_size,
                 lr=sc.lr, prox_lambda=sc.prox_lambda),
-            mesh=MeshSpec.from_name(sc.mesh, shard_tiers=sc.shard_tiers))
+            mesh=MeshSpec.from_name(sc.mesh, shard_tiers=sc.shard_tiers),
+            faults=FaultSpec(
+                churn_rate=sc.churn_rate, churn_events=sc.churn_events,
+                churn_downtime=sc.churn_downtime,
+                churn_window=sc.churn_window, seed=sc.fault_seed))

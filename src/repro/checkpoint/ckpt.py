@@ -5,10 +5,14 @@ Layout:  <dir>/step_<N>/shard_<p>.npz + manifest.json
   * Leaves are flattened by tree path; each host process writes its own
     ``shard_<process_index>.npz`` (single-process here, but the API is
     multi-host shaped: restore concatenates by path).
-  * Writes go to ``step_<N>.tmp`` then os.rename — a crash mid-save never
-    corrupts the latest checkpoint (fault tolerance requirement).
+  * Writes go to ``step_<N>.tmp`` then os.rename, with the payload files,
+    the tmp directory, and the parent directory fsync'd around the rename
+    — a crash (or power loss) mid-save never corrupts the latest
+    checkpoint and a completed save is actually on the platter.
   * A background thread performs the device->host copy + write so training
-    doesn't stall (async checkpointing); ``wait()`` joins before exit.
+    doesn't stall (async checkpointing); ``wait()`` joins before exit, and
+    a failed background write raises from the *next* ``save()`` (which
+    joins the writer first) as well as from ``wait()``.
   * manifest.json records step, per-leaf shapes/dtypes and a content hash;
     ``restore`` verifies the hash and falls back to the previous checkpoint
     on corruption.
@@ -35,6 +39,17 @@ def _treedef_token(tree) -> str:
     return str(jax.tree_util.tree_structure(tree))
 
 
+def _fsync_path(path: str) -> None:
+    """fsync a file or directory by path (directory fsync commits the
+    rename itself — the atomic-save guarantee is only as durable as the
+    parent directory's metadata)."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 class CheckpointManager:
     def __init__(self, directory: str, keep: int = 3,
                  process_index: int = 0):
@@ -47,7 +62,13 @@ class CheckpointManager:
 
     # ------------------------------------------------------------------
     def save(self, step: int, state: Any, blocking: bool = False) -> None:
-        """Snapshot to host then write asynchronously."""
+        """Snapshot to host then write asynchronously.
+
+        Joins any in-flight background write first, so an error from the
+        *previous* async save surfaces here (callers that only ever call
+        ``save()`` in a loop still see write failures promptly, not just
+        at the final ``wait()``).
+        """
         self.wait()
         host_state = jax.tree.map(lambda x: np.asarray(x), state)
 
@@ -86,17 +107,29 @@ class CheckpointManager:
             "n_processes": 1,
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+            f.write(json.dumps(manifest))
+            f.flush()
+            os.fsync(f.fileno())
+        # durability: payload files -> tmp dir entries -> rename -> parent
+        # dir metadata.  Without the final directory fsync the rename can
+        # vanish on power loss even though every file inside survived.
+        _fsync_path(os.path.join(tmp, f"shard_{self.pidx}.npz"))
+        _fsync_path(tmp)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
-        self._gc()
+        _fsync_path(self.dir)
+        self._gc(current=step)
 
-    def _gc(self) -> None:
+    def _gc(self, current: Optional[int] = None) -> None:
         steps = self.all_steps()
         for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
-                          ignore_errors=True)
+            if s == current:
+                continue  # never collect the step this writer just renamed
+            path = os.path.join(self.dir, f"step_{s:010d}")
+            if os.path.exists(path + ".tmp"):
+                continue  # another writer is mid-flight on this step
+            shutil.rmtree(path, ignore_errors=True)
 
     def _raise_if_failed(self):
         if self._error is not None:

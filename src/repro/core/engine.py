@@ -26,10 +26,15 @@ from __future__ import annotations
 import abc
 import dataclasses
 import enum
-from typing import Any
+import pickle
+from typing import Any, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
+from repro.core import tiering
 from repro.core.scheduler import EventQueue, Metrics
 from repro.core.simulation import SimEnv
 
@@ -47,6 +52,11 @@ class EngineConfig:
     retier_every: int = 0
     #: multiplicative latency drift per re-profiling (tiering.drift_latencies)
     retier_drift: float = 0.2
+    #: engine-plane fault knobs (core/faults.py FaultConfig): tier
+    #: blackouts, uplink poisoning / the validation gate, and the
+    #: crash-resume checkpoint cadence.  None (the default) keeps the
+    #: loop byte-for-byte the zero-fault engine.
+    faults: Optional[faults_mod.FaultConfig] = None
 
 
 class Outcome(enum.Enum):
@@ -91,6 +101,9 @@ class EngineContext:
     bytes_up: float = 0.0
     bytes_down: float = 0.0
     t_global: int = 0
+    #: the run's FaultPlane (core/faults.py), or None for zero-fault runs
+    #: — strategies read the gate config and poison draws off it
+    faults: Any = None
 
     def draw_seed(self) -> int:
         """The per-event PRNG seed draw (exactly one ``rng.integers``)."""
@@ -129,9 +142,76 @@ class ServerStrategy(abc.ABC):
     def on_eval(self, env: SimEnv, ctx: EngineContext) -> None:
         """Hook after each periodic eval (e.g. re-measure the wire ratio)."""
 
+    def on_fault(self, env: SimEnv, ctx: EngineContext, now: float,
+                 actor: Any) -> Outcome:
+        """Handle a fault-plane marker event (core/faults.py pushes them;
+        the loop routes them here instead of ``on_event``).  Default:
+        ignore — strategies without a tier model treat a blackout as a
+        no-op."""
+        return Outcome.DISCARD
+
+    # -- crash-resume (DESIGN.md §Fault-plane) --------------------------
+    def snapshot(self):
+        """(device_pytree, host_state) capturing all server state; the
+        device tree round-trips through the CheckpointManager, the host
+        dict through a pickle.  Bitwise resume requires *everything* the
+        strategy mutates to be here."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} does not implement engine crash-resume")
+
+    def restore(self, dev, host) -> None:
+        """Apply a :meth:`snapshot` onto a freshly bound strategy."""
+        raise NotImplementedError(
+            f"strategy {self.name!r} does not implement engine crash-resume")
+
+
+def _engine_snapshot(ctx: EngineContext, strategy: ServerStrategy,
+                     env: SimEnv) -> dict:
+    """Everything a resumed run needs to replay bitwise: the strategy's
+    device/host state, the event queue, the engine rng stream position,
+    metrics so far, byte counters, the fault-plane stream, and the
+    (possibly re-tiered) tier map.  Device arrays go through the
+    CheckpointManager's array path; the host side rides along as one
+    pickled uint8 leaf."""
+    dev, host = strategy.snapshot()
+    blob = pickle.dumps({
+        "t_global": ctx.t_global,
+        "bytes_up": ctx.bytes_up,
+        "bytes_down": ctx.bytes_down,
+        "metrics": dataclasses.asdict(ctx.metrics),
+        "queue": ctx.q.state(),
+        "rng": ctx.rng.bit_generator.state,
+        "faults": None if ctx.faults is None else ctx.faults.state(),
+        "strategy": host,
+        "tm": (env.tm.tier_of, list(env.tm.members), env.tm.latencies),
+    })
+    return {"dev": dev, "host": np.frombuffer(blob, np.uint8)}
+
+
+def _apply_engine_snapshot(snap: dict, ctx: EngineContext,
+                           strategy: ServerStrategy, env: SimEnv) -> None:
+    host = pickle.loads(np.asarray(snap["host"]).tobytes())
+    ctx.t_global = int(host["t_global"])
+    ctx.bytes_up = float(host["bytes_up"])
+    ctx.bytes_down = float(host["bytes_down"])
+    ctx.metrics = Metrics(**host["metrics"])
+    ctx.q.set_state(host["queue"])
+    ctx.rng.bit_generator.state = host["rng"]
+    if ctx.faults is not None and host["faults"] is not None:
+        ctx.faults.set_state(host["faults"])
+    if ctx.cfg.retier_every:  # the map can only have drifted when retiering
+        tier_of, members, lat = host["tm"]
+        env.tm = tiering.TierMap(tier_of=tier_of, members=list(members),
+                                 latencies=lat)
+    # jnp.asarray preserves shapes/dtypes, so the restored state hits the
+    # executor's existing compile-cache entries — zero extra recompiles
+    strategy.restore(jax.tree.map(jnp.asarray, snap["dev"]),
+                     host["strategy"])
+
 
 def run_engine(env: SimEnv, strategy: ServerStrategy, cfg: EngineConfig,
-               on_record=None) -> Metrics:
+               on_record=None, checkpoint_dir: Optional[str] = None,
+               resume: bool = False) -> Metrics:
     """The one event loop.  Timestamp-ordered server reactions (Figure 1's
     timeline), a global update budget, and the shared eval cadence.
 
@@ -142,19 +222,50 @@ def run_engine(env: SimEnv, strategy: ServerStrategy, cfg: EngineConfig,
     With ``cfg.retier_every > 0`` the environment's tier map is rebuilt
     from drifted latencies every N committed updates; the original map is
     restored on exit so shared/cached environments stay reproducible.
+
+    Fault plane (``cfg.faults``, DESIGN.md §Fault-plane): blackout markers
+    are scheduled at bootstrap and routed to ``strategy.on_fault``; with
+    ``checkpoint_dir`` and ``faults.checkpoint_every > 0`` the full engine
+    state is checkpointed every N committed updates through
+    checkpoint/ckpt.py, and ``resume=True`` restores the newest snapshot
+    (falling back to a fresh start when none exists) — the resumed run
+    replays to a bitwise-identical metrics trajectory.
     """
     ctx = EngineContext(
         q=EventQueue(),
         rng=np.random.default_rng(cfg.seed + strategy.seed_offset),
         metrics=Metrics(), cfg=cfg, executor=env.executor())
+    if cfg.faults is not None and cfg.faults.injects_faults:
+        ctx.faults = faults_mod.FaultPlane(cfg.faults, env.tm.n_tiers)
     strategy.bind(env, cfg)
-    strategy.bootstrap(env, ctx)
+
+    every = cfg.faults.checkpoint_every if cfg.faults is not None else 0
+    mgr = None
+    if checkpoint_dir is not None and every > 0:
+        from repro.checkpoint import CheckpointManager
+        mgr = CheckpointManager(checkpoint_dir, keep=2)
 
     tm0 = env.tm if cfg.retier_every else None
+    resumed = False
+    if mgr is not None and resume:
+        try:
+            snap, _ = mgr.restore(like=_engine_snapshot(ctx, strategy, env))
+            _apply_engine_snapshot(snap, ctx, strategy, env)
+            resumed = True
+        except FileNotFoundError:
+            pass  # no snapshot yet (killed before the first save)
+    if not resumed:
+        strategy.bootstrap(env, ctx)
+        if ctx.faults is not None:
+            ctx.faults.schedule(ctx.q)
+
     try:
         while ctx.t_global < cfg.total_updates and len(ctx.q):
             now, actor = ctx.q.pop()
-            out = strategy.on_event(env, ctx, now, actor)
+            if ctx.faults is not None and faults_mod.is_fault_event(actor):
+                out = strategy.on_fault(env, ctx, now, actor)
+            else:
+                out = strategy.on_event(env, ctx, now, actor)
             if out is Outcome.DISCARD:
                 continue
             ctx.t_global += 1
@@ -172,7 +283,11 @@ def run_engine(env: SimEnv, strategy: ServerStrategy, cfg: EngineConfig,
                                "bytes_down": ctx.bytes_down})
             if cfg.retier_every and ctx.t_global % cfg.retier_every == 0:
                 env.retier(ctx.rng, cfg.retier_drift)
+            if mgr is not None and ctx.t_global % every == 0:
+                mgr.save(ctx.t_global, _engine_snapshot(ctx, strategy, env))
     finally:
+        if mgr is not None:
+            mgr.wait()
         if tm0 is not None:
             env.tm = tm0
     return ctx.metrics

@@ -294,6 +294,51 @@ class RoundExecutor:
         self._steps[key] = jax.jit(step, donate_argnums=_donate((0, 1)))
         return self._steps[key]
 
+    def _fedat_step_gated(self, codec, use_prox: bool, gate):
+        """FedAT round step with the fault plane's server-side validation
+        gate (core/steps.py) spliced in after the uplink decode: poison
+        injection (NaN uplinks) → non-finite zero-weighting + renormalize
+        → optional delta-norm clip → Eq. 4 over survivors, with the
+        previous tier/global model kept when *no* client survives.  A
+        distinct trace key (gate config included) keeps the ungated step
+        byte-for-byte the parity-oracle body."""
+        if self.D > 1:
+            raise NotImplementedError(
+                "the update validation gate is single-device only for now "
+                f"(mesh data axis D={self.D}); run gated fault scenarios "
+                "without a mesh data axis")
+        self._check_in_graph(codec)
+        key = ("fedat", codec.name, use_prox, "gate", gate.clip_norm)
+        if key in self._steps:
+            return self._steps[key]
+        from repro.core import steps as fl_steps
+        env = self.env
+        update = env.update_fn_raw if use_prox else env.update_fn_noprox_raw
+        lossy = codec.lossy
+        clip = float(gate.clip_norm)
+
+        def step(w_global, tier_models, m, ids, w_intra, w_cross, keys,
+                 poison):
+            self._bump(key)
+            w_sent = _pin(lossy(w_global))
+            client_params, _ = update(w_sent, self._gather(ids), keys)
+            client_params = _pin(lossy(_pin(client_params)))
+            client_params = fl_steps.poison_updates(client_params, poison)
+            client_params, w_ok, any_ok = fl_steps.gate_updates(
+                client_params, w_intra, w_sent, clip)
+            tier_model = _pin(
+                aggregation.weighted_average(client_params, w_ok))
+            prev = jax.tree.map(lambda s: s[m], tier_models)
+            tier_model = jax.tree.map(
+                lambda nw, p: jnp.where(any_ok, nw, p), tier_model, prev)
+            tier_models = jax.tree.map(lambda s, nw: s.at[m].set(nw),
+                                       tier_models, tier_model)
+            w_global = aggregation.weighted_average(tier_models, w_cross)
+            return w_global, tier_models
+
+        self._steps[key] = jax.jit(step, donate_argnums=_donate((0, 1)))
+        return self._steps[key]
+
     def _fedavg_step(self, codec=None):
         """``codec=None`` is the paper's raw-f32 baseline link and keeps the
         seed step body (and its trace-count key) byte-for-byte; a codec adds
@@ -315,6 +360,40 @@ class RoundExecutor:
             return aggregation.weighted_average(_pin(client_params), w_intra)
 
         self._steps[key] = jax.jit(step, donate_argnums=_donate((0,)))
+        return self._steps[key]
+
+    def _fedavg_step_gated(self, codec, gate):
+        """FedAvg/TiFL round step with the validation gate; the no-survivor
+        fallback keeps the server's previous model."""
+        if self.D > 1:
+            raise NotImplementedError(
+                "the update validation gate is single-device only for now "
+                f"(mesh data axis D={self.D}); run gated fault scenarios "
+                "without a mesh data axis")
+        self._check_in_graph(codec)
+        key = (("fedavg",) if codec is None else ("fedavg", codec.name)) \
+            + ("gate", gate.clip_norm)
+        if key in self._steps:
+            return self._steps[key]
+        from repro.core import steps as fl_steps
+        update = self.env.update_fn_noprox_raw
+        clip = float(gate.clip_norm)
+
+        def step(w, ids, w_intra, keys, poison):
+            self._bump(key)
+            w_in = w if codec is None else _pin(codec.lossy(w))
+            client_params, _ = update(w_in, self._gather(ids), keys)
+            if codec is not None:
+                client_params = _pin(codec.lossy(_pin(client_params)))
+            client_params = _pin(client_params)
+            client_params = fl_steps.poison_updates(client_params, poison)
+            client_params, w_ok, any_ok = fl_steps.gate_updates(
+                client_params, w_intra, w_in, clip)
+            new_w = aggregation.weighted_average(client_params, w_ok)
+            return jax.tree.map(lambda nw, p: jnp.where(any_ok, nw, p),
+                                new_w, w)
+
+        self._steps[key] = jax.jit(step)
         return self._steps[key]
 
     def _fedasync_step(self, codec=None):
@@ -350,7 +429,8 @@ class RoundExecutor:
     # public per-event entry points
     # ------------------------------------------------------------------
     def fedat_round(self, w_global, tier_models, m: int, ids: np.ndarray,
-                    seed: int, *, codec, use_prox: bool, cross_weights):
+                    seed: int, *, codec, use_prox: bool, cross_weights,
+                    gate=None, poison=None):
         """One FedAT tier-completion round (Algorithm 1 steps 1-5), fused.
 
         ``cross_weights`` is the (M,) Eq. 3 weight vector, computed
@@ -366,23 +446,44 @@ class RoundExecutor:
         contract holds for the sharded step: shard_map does not change
         which arguments are donated, only how the client fan-out is laid
         out across the mesh.
+
+        With the fault plane's ``gate`` (an :class:`~repro.core.steps.
+        UpdateGate`) a distinct gated step is compiled; ``poison`` is the
+        (K,) bool uplink-poison mask over the padded client axis (None =
+        no poisoning this round).
         """
-        step = self._fedat_step(codec, use_prox)
         pid, ns = self._pad_ids(ids)
         keys = self._pad_keys(seed, len(ids))
+        if gate is None:
+            step = self._fedat_step(codec, use_prox)
+            return step(w_global, tier_models, np.int32(m), pid,
+                        aggregation.client_weights_host(ns), cross_weights,
+                        keys)
+        step = self._fedat_step_gated(codec, use_prox, gate)
+        if poison is None:
+            poison = np.zeros(self.K, bool)
         return step(w_global, tier_models, np.int32(m), pid,
-                    aggregation.client_weights_host(ns), cross_weights, keys)
+                    aggregation.client_weights_host(ns), cross_weights,
+                    keys, poison)
 
-    def fedavg_round(self, w, ids: np.ndarray, seed: int, *, codec=None):
+    def fedavg_round(self, w, ids: np.ndarray, seed: int, *, codec=None,
+                     gate=None, poison=None):
         """One synchronous FedAvg round over the sampled clients, fused.
         ``codec=None`` = the paper's raw f32 links; a codec compresses both
         links exactly as in the FedAT step.  Client-shards over the mesh
         data axis exactly like :meth:`fedat_round` (TiFL rounds run
-        through here too)."""
-        step = self._fedavg_step(codec)
+        through here too).  ``gate``/``poison`` select the fault plane's
+        gated step, as in :meth:`fedat_round`."""
         pid, ns = self._pad_ids(ids)
         keys = self._pad_keys(seed, len(ids))
-        return step(w, pid, aggregation.client_weights_host(ns), keys)
+        if gate is None:
+            step = self._fedavg_step(codec)
+            return step(w, pid, aggregation.client_weights_host(ns), keys)
+        step = self._fedavg_step_gated(codec, gate)
+        if poison is None:
+            poison = np.zeros(self.K, bool)
+        return step(w, pid, aggregation.client_weights_host(ns), keys,
+                    poison)
 
     def fedasync_round(self, w, client: int, a_eff: float, seed: int, *,
                        codec=None):

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-import itertools
 from typing import Any, Callable, List, Optional, Tuple
 
 
@@ -25,12 +24,13 @@ class Event:
 class EventQueue:
     def __init__(self):
         self._heap: List[Event] = []
-        self._counter = itertools.count()
+        self._counter = 0
         self.now = 0.0
 
     def push(self, delay: float, actor: Any) -> None:
         heapq.heappush(self._heap,
-                       Event(self.now + delay, next(self._counter), actor))
+                       Event(self.now + delay, self._counter, actor))
+        self._counter += 1
 
     def pop(self) -> Tuple[float, Any]:
         ev = heapq.heappop(self._heap)
@@ -39,6 +39,22 @@ class EventQueue:
 
     def __len__(self) -> int:
         return len(self._heap)
+
+    # -- crash-resume (core/faults.py): the queue must round-trip through
+    # a pickle so a resumed engine replays the exact same event order
+    def state(self) -> dict:
+        """Serializable snapshot: heap entries (already heap-ordered),
+        the monotonic tiebreak counter, and the simulated clock."""
+        return {
+            "heap": [(e.time, e.seq, e.actor) for e in self._heap],
+            "counter": self._counter,
+            "now": self.now,
+        }
+
+    def set_state(self, state: dict) -> None:
+        self._heap = [Event(t, s, a) for t, s, a in state["heap"]]
+        self._counter = int(state["counter"])
+        self.now = float(state["now"])
 
 
 @dataclasses.dataclass

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import faults as faults_mod
 from repro.core import tiering
 from repro.core.clients import make_client_update, make_eval_fn
 from repro.runtime import sharding
@@ -62,6 +63,18 @@ class SimConfig:
     delay_bands: Tuple[Tuple[float, float], ...] = PAPER_DELAY_BANDS
     #: unstable clients drop permanently at uniform(*dropout_window)
     dropout_window: Tuple[float, float] = (50.0, 400.0)
+    #: transient availability churn (core/faults.py churn_schedule): each
+    #: client is a churner with probability churn_rate and gets
+    #: churn_events down-windows (onsets uniform in churn_window,
+    #: durations exponential with mean churn_downtime).  0.0 keeps
+    #: alive() the exact permanent-dropout compare (zero-fault parity).
+    churn_rate: float = 0.0
+    churn_events: int = 2
+    churn_downtime: float = 30.0
+    churn_window: Tuple[float, float] = (50.0, 400.0)
+    #: dedicated fault-plane rng stream seed (spec faults.seed) — churn
+    #: draws never touch the environment rng
+    fault_seed: int = 0
     #: named device mesh for the fused round step (launch/mesh.py grammar:
     #: None/"single" | "host[:n_pods]" | "production[:n_pods]").  With a
     #: data axis > 1 the per-round client fan-out is sharded over it
@@ -140,6 +153,13 @@ class SimEnv:
         self.dropout_at[self.dropout_ids] = rng.uniform(
             *sc.dropout_window, size=sc.n_unstable)
 
+        # transient churn windows on top of permanent dropout, drawn from
+        # the dedicated fault stream (core/faults.py) so the environment
+        # rng stream above is untouched; None when churn is off
+        self.churn_down = faults_mod.churn_schedule(
+            sc.n_clients, sc.churn_rate, sc.churn_events,
+            sc.churn_downtime, sc.churn_window, sc.fault_seed)
+
         # model init + jitted client update / eval — all built from the
         # registry's bound FLModel over arbitrary pytree params
         key = jax.random.PRNGKey(sc.seed)
@@ -213,7 +233,17 @@ class SimEnv:
         return {int(c): float(self.dropout_at[c]) for c in self.dropout_ids}
 
     def alive(self, now: float) -> np.ndarray:
-        return self.dropout_at > now
+        """Per-client availability at ``now``: not permanently dropped and
+        not inside a transient churn down-window.  A client sampled while
+        up can be down by the time its round completes — the strategies
+        re-filter on completion, which is how mid-round failures shrink
+        the participant set (Eq. 4 renormalizes over survivors)."""
+        up = self.dropout_at > now
+        if self.churn_down is None:
+            return up
+        starts, ends = self.churn_down
+        down = ((starts <= now) & (now < ends)).any(axis=1)
+        return up & ~down
 
     def retier(self, rng: np.random.Generator, drift: float = 0.2) -> bool:
         """Re-profile client latencies (multiplicative drift) and rebuild the

@@ -260,3 +260,87 @@ def split_batch_for_pods(batch, n_pods: int):
             return jax.ShapeDtypeStruct(shape, x.dtype)
         return x.reshape(shape)
     return jax.tree.map(split, batch)
+
+
+# ---------------------------------------------------------------------------
+# server-side update validation gate (fault plane, DESIGN.md §Fault-plane)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UpdateGate:
+    """Validation applied to *decoded* client uplinks before Eq. 4:
+    non-finite client updates are zero-weighted (and their payloads
+    sanitized to the reference params, since NaN * 0 is still NaN inside
+    the weighted average) and, when ``clip_norm > 0``, every surviving
+    update's delta from the reference is L2-clipped.  Hashable so the
+    executor can key a distinct jitted step per gate config."""
+    clip_norm: float = 0.0
+
+
+def poison_updates(client_params, poison):
+    """Overwrite poisoned clients' float leaves with NaN — the fault
+    plane's stand-in for a corrupted/malicious uplink.  Applied *after*
+    the uplink codec decode (a lossy codec would otherwise scrub the
+    injected NaNs before the gate ever sees them).  ``poison`` is a (K,)
+    bool mask over the padded client axis."""
+    def leaf_fn(leaf):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            return leaf
+        mask = poison.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.where(mask, jnp.asarray(jnp.nan, leaf.dtype), leaf)
+    return jax.tree.map(leaf_fn, client_params)
+
+
+def gate_updates(client_params, w_intra, ref, clip_norm):
+    """The gate body (traced inside the executor's gated round steps).
+
+    ``client_params`` is the K-stacked decoded uplink tree, ``w_intra``
+    the (K,) Eq. 4 sample weights, ``ref`` the params the clients trained
+    from.  Returns ``(sanitized_params, gated_weights, any_ok)``:
+
+      * clients with any non-finite float leaf get weight 0 and their
+        payload replaced by ``ref`` (sanitize-then-weight — a NaN times a
+        zero weight would still sink the sum);
+      * surviving weights renormalize to 1 over the finite clients, so
+        Eq. 4 stays a convex combination;
+      * with ``clip_norm > 0`` each surviving delta from ``ref`` is
+        clipped to that L2 norm (flat, over the whole update);
+      * ``any_ok`` is False when *no* client survived — callers keep the
+        previous model in that case.
+    """
+    k = w_intra.shape[0]
+    ok = jnp.ones((k,), bool)
+    for leaf in jax.tree.leaves(client_params):
+        if not jnp.issubdtype(leaf.dtype, jnp.inexact):
+            continue
+        ok = ok & jnp.isfinite(leaf).reshape(k, -1).all(axis=1)
+
+    def expand(mask, leaf):
+        return mask.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+    client_params = jax.tree.map(
+        lambda l, r: jnp.where(expand(ok, l), l,
+                               jnp.broadcast_to(r[None], l.shape)),
+        client_params, ref)
+
+    if clip_norm > 0:
+        sq = jnp.zeros((k,), jnp.float32)
+        for l, r in zip(jax.tree.leaves(client_params),
+                        jax.tree.leaves(ref)):
+            d = l.astype(jnp.float32) - r[None].astype(jnp.float32)
+            sq = sq + jnp.sum(d.reshape(k, -1) ** 2, axis=1)
+        norm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(norm, 1e-12))
+        client_params = jax.tree.map(
+            lambda l, r: (r[None].astype(jnp.float32)
+                          + (l.astype(jnp.float32)
+                             - r[None].astype(jnp.float32))
+                          * expand(scale, l)).astype(l.dtype),
+            client_params, ref)
+
+    w = w_intra * ok
+    total = jnp.sum(w)
+    any_ok = total > 0
+    w = jnp.where(any_ok, w / jnp.maximum(total, jnp.float32(1e-30)),
+                  jnp.zeros_like(w))
+    return client_params, w, any_ok

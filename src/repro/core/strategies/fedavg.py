@@ -71,8 +71,15 @@ class FedAvgStrategy(ServerStrategy):
         ctx.bytes_down += len(ids) * env.model_bytes * self._ratio
         # fused round: gather resident data -> vmapped local train ->
         # sample-weighted FedAvg, one jitted call (core/executor.py)
-        self.w = ctx.executor.fedavg_round(self.w, ids, ctx.draw_seed(),
-                                           codec=self.codec)
+        gate = None if ctx.faults is None else ctx.faults.gate
+        if gate is None:
+            self.w = ctx.executor.fedavg_round(self.w, ids, ctx.draw_seed(),
+                                               codec=self.codec)
+        else:
+            poison = ctx.faults.draw_poison(len(ids), ctx.executor.K)
+            self.w = ctx.executor.fedavg_round(self.w, ids, ctx.draw_seed(),
+                                               codec=self.codec, gate=gate,
+                                               poison=poison)
         ctx.bytes_up += len(ids) * env.model_bytes * self._ratio
         self._schedule(env, ctx)
         return Outcome.STEP
@@ -84,3 +91,11 @@ class FedAvgStrategy(ServerStrategy):
         if self.codec is not None:  # track the drifting wire ratio, sampled
             self._ratio = self.codec.measure_ratio(self.w,
                                                    self.ratio_sample_elems)
+
+    # -- crash-resume ---------------------------------------------------
+    def snapshot(self):
+        return {"w": self.w}, {"ratio": self._ratio}
+
+    def restore(self, dev, host) -> None:
+        self.w = dev["w"]
+        self._ratio = host["ratio"]

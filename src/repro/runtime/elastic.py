@@ -18,6 +18,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aggregation
 
@@ -65,3 +66,30 @@ def grow_pods(state: dict, n_new: int) -> dict:
     counts = jnp.concatenate(
         [state["counts"], jnp.zeros((n_new,), state["counts"].dtype)])
     return {"params": params, "opt": opt, "step": step, "counts": counts}
+
+
+def masked_cross_weights(counts: np.ndarray,
+                         alive: np.ndarray) -> np.ndarray:
+    """Eq. 3 cross-tier weights renormalized over the surviving M' tiers.
+
+    A blacked-out tier gets weight exactly 0; the survivors' weights are
+    the paper's reversed-update-count weights computed *as if only they
+    existed* (compress → Eq. 3 → scatter back), so they sum to 1 over M'.
+    Host-side f32, same eager-weight discipline as
+    :func:`~repro.core.aggregation.cross_tier_weights_host`.
+    """
+    alive = np.asarray(alive, bool)
+    w = np.zeros(len(alive), np.float32)
+    if alive.any():
+        w[alive] = aggregation.cross_tier_weights_host(
+            np.asarray(counts)[alive])
+    return w
+
+
+def bootstrap_tier(tier_models: Any, w_global: Any, m: int) -> Any:
+    """A returning (post-blackout) tier restarts from the current global
+    model: overwrite slot ``m`` of the (M, ...)-stacked tier models with
+    ``w_global`` — the elastic 'grow' move applied in place on the
+    fixed-M stack the engine strategies carry."""
+    return jax.tree.map(
+        lambda s, g: s.at[m].set(g.astype(s.dtype)), tier_models, w_global)

@@ -12,6 +12,13 @@ train step with:
     get re-tiered instead of stalling the sync group: the paper's insight
     applied at datacenter scale);
   * simulated failure injection for tests (``inject_failure_rate``).
+
+This wrapper guards the *datacenter trainer* loop (launch/train.py).  The
+simulation engine's fault story lives in core/faults.py instead: there,
+faults are spec-driven and deterministic (churn windows, tier blackouts,
+poisoned uplinks, bitwise crash-resume), because the engine's contract is
+a reproducible trajectory — retry/backoff wall-clock machinery like this
+has no place inside it.
 """
 from __future__ import annotations
 
@@ -55,13 +62,20 @@ class GuardedRunner:
 
     def __init__(self, step_fn: Callable, ckpt: CheckpointManager,
                  ckpt_every: int = 50, max_retries: int = 3,
-                 inject_failure_rate: float = 0.0, seed: int = 0):
+                 inject_failure_rate: float = 0.0, seed: int = 0,
+                 sleep: Callable[[float], None] = time.sleep,
+                 clock: Callable[[], float] = time.perf_counter):
+        """``sleep``/``clock`` are injectable so tests can drive the
+        backoff and straggler timing deterministically without real
+        wall-clock waits."""
         self.step_fn = step_fn
         self.ckpt = ckpt
         self.ckpt_every = ckpt_every
         self.max_retries = max_retries
         self.inject = inject_failure_rate
         self.rng = np.random.default_rng(seed)
+        self._sleep = sleep
+        self._clock = clock
         self.straggler = StragglerStats()
         self.stats: Dict[str, int] = {"failures": 0, "restores": 0,
                                       "steps": 0, "straggler_steps": 0}
@@ -77,9 +91,9 @@ class GuardedRunner:
                 try:
                     if self.inject and self.rng.random() < self.inject:
                         raise RuntimeError("injected node failure")
-                    t0 = time.perf_counter()
+                    t0 = self._clock()
                     state, metrics = self.step_fn(state, batch)
-                    dt = time.perf_counter() - t0
+                    dt = self._clock() - t0
                     if self.straggler.observe(dt):
                         self.stats["straggler_steps"] += 1
                         log.warning("straggler step %d: %.3fs (median %.3fs)",
@@ -92,7 +106,7 @@ class GuardedRunner:
                         raise
                     log.warning("step %d failed (%s); restoring (retry %d)",
                                 step, e, retries)
-                    time.sleep(min(0.05 * 2 ** retries, 1.0))
+                    self._sleep(min(0.05 * 2 ** retries, 1.0))
                     try:
                         state, restored = self.ckpt.restore(state)
                         step = restored

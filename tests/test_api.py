@@ -41,21 +41,27 @@ def test_json_round_trip_golden():
     # is part of the provenance contract — changing any default field,
     # field name, or the canonicalization breaks attribution of archived
     # bench results and must be deliberate (bump SPEC_VERSION).
-    # v4 added data.attention_backend (kernel-layer attention vs. the
-    # reference oracle); v3 replaced data.task with the registry-backed
-    # data.model (+ token knobs); v2 added the mesh section.
-    assert d["spec_version"] == api.SPEC_VERSION == 4
-    assert spec.hash() == "4ebaf923c953"
+    # v5 added the faults section (deterministic fault plane); v4 added
+    # data.attention_backend (kernel-layer attention vs. the reference
+    # oracle); v3 replaced data.task with the registry-backed data.model
+    # (+ token knobs); v2 added the mesh section.
+    assert d["spec_version"] == api.SPEC_VERSION == 5
+    assert spec.hash() == "f556a6283a5b"
 
 
 def test_old_spec_documents_still_parse():
-    """Version-1/2/3 documents (data.task enum pre-v3, no
-    attention_backend pre-v4, v1 additionally pre-mesh) parse to the same
-    spec under SPEC_VERSION 4; unknown versions still fail with the
-    supported range.  (Full migration coverage lives in
+    """Version-1/2/3/4 documents (no faults section pre-v5, data.task
+    enum pre-v3, no attention_backend pre-v4, v1 additionally pre-mesh)
+    parse to the same spec under SPEC_VERSION 5; unknown versions still
+    fail with the supported range.  (Full migration coverage lives in
     tests/test_model_registry.py.)"""
     spec = api.ExperimentSpec()
     d = spec.to_dict()
+    d.pop("faults")
+    d["spec_version"] = 4
+    back = api.ExperimentSpec.from_dict(d)
+    assert back == spec
+    assert back.faults == api.FaultSpec()  # v4 docs get the zero-fault plane
     d["data"].pop("attention_backend")
     d["spec_version"] = 3
     back = api.ExperimentSpec.from_dict(d)

@@ -68,3 +68,75 @@ def test_atomic_tmp_cleanup(tmp_path):
     mgr = CheckpointManager(str(tmp_path), keep=3)
     mgr.save(1, _state(1), blocking=True)
     assert not any(n.endswith(".tmp") for n in os.listdir(str(tmp_path)))
+
+
+def test_background_write_error_surfaces_on_next_save(tmp_path):
+    """An async writer failure must not be silent until the final wait():
+    the next save() joins the writer first and raises the stored error."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+
+    def boom(step, host_state):
+        raise IOError("disk full")
+
+    orig, mgr._write = mgr._write, boom
+    mgr.save(1, _state(1), blocking=False)
+    with pytest.raises(IOError, match="disk full"):
+        mgr.save(2, _state(2), blocking=False)
+    # the error is consumed once; the manager stays usable afterwards
+    mgr._write = orig
+    mgr.save(3, _state(3), blocking=False)
+    mgr.wait()
+    assert mgr.latest_step() == 3
+
+
+def test_background_write_error_surfaces_on_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+
+    def boom(step, host_state):
+        raise IOError("enospc")
+
+    mgr._write = boom
+    mgr.save(1, _state(1), blocking=False)
+    with pytest.raises(IOError, match="enospc"):
+        mgr.wait()
+
+
+def test_gc_skips_in_flight_tmp(tmp_path):
+    """keep-last-k GC must not delete a step another writer is mid-flight
+    on (its ``.tmp`` sibling still exists)."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(1, _state(1), blocking=True)
+    mgr.save(2, _state(2), blocking=True)
+    assert mgr.all_steps() == [2]
+    # simulate another writer that renamed step_3 but whose tmp re-write
+    # is in flight (e.g. overwriting the same step)
+    os.makedirs(str(tmp_path / "step_0000000003"))
+    os.makedirs(str(tmp_path / "step_0000000003.tmp"))
+    mgr.save(4, _state(4), blocking=True)
+    assert 3 in mgr.all_steps()          # spared: tmp sibling present
+    assert 2 not in mgr.all_steps()      # ordinary stale step collected
+    assert 4 in mgr.all_steps()
+
+
+def test_gc_never_collects_the_step_just_written(tmp_path):
+    """A reused directory can hold higher-numbered steps from a previous
+    run; GC prunes by ascending step but must spare the current write."""
+    mgr = CheckpointManager(str(tmp_path), keep=1)
+    mgr.save(10, _state(10), blocking=True)   # stale high step
+    mgr.save(2, _state(2), blocking=True)     # current, numerically lower
+    assert 2 in mgr.all_steps()
+
+
+def test_save_fsyncs_payload_dir_and_parent(tmp_path, monkeypatch):
+    """Durability order: shard file -> tmp dir -> rename -> parent dir.
+    Without the trailing parent fsync the rename can vanish on power
+    loss even though every file inside survived."""
+    from repro.checkpoint import ckpt as ckpt_mod
+    synced = []
+    monkeypatch.setattr(ckpt_mod, "_fsync_path", synced.append)
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, _state(1), blocking=True)
+    assert len(synced) == 3
+    assert synced[0].endswith("shard_0.npz")
+    assert synced[1].endswith("step_0000000001.tmp")
+    assert synced[2] == str(tmp_path)

@@ -1,0 +1,208 @@
+"""Bitwise crash-resume (DESIGN.md §Fault-plane): an interrupted run,
+resumed from its newest engine snapshot, replays the *exact* metrics
+trajectory of an uninterrupted run — same floats, same byte counters,
+same event order — with zero extra jit traces.  Pinned in-process (a
+raising eval callback) and out-of-process (SIGKILL mid-run, the chaos
+test)."""
+import hashlib
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import api
+
+TOTAL = 12
+
+
+def _spec(**faults_kwargs):
+    kw = dict(churn_rate=0.5, churn_window=(1.0, 60.0),
+              churn_downtime=20.0, checkpoint_every=2, seed=4)
+    kw.update(faults_kwargs)
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_clients=8, samples_per_client=24, image_hw=8),
+        tiers=api.TierSpec(n_tiers=2, clients_per_round=2, n_unstable=0),
+        engine=api.EngineSpec(total_updates=TOTAL, eval_every=2,
+                              local_epochs=1),
+        faults=api.FaultSpec(**kw))
+
+
+def _fields(m):
+    return [m.times, m.rounds, m.acc, m.acc_var, m.bytes_up, m.bytes_down]
+
+
+def _traj_hash(m):
+    doc = {"times": m.times, "rounds": m.rounds, "acc": m.acc,
+           "acc_var": m.acc_var, "bytes_up": m.bytes_up,
+           "bytes_down": m.bytes_down}
+    return hashlib.sha256(
+        json.dumps(doc, sort_keys=True).encode()).hexdigest()
+
+
+class Abort(Exception):
+    pass
+
+
+def test_interrupted_run_resumes_bitwise(tmp_path):
+    spec = _spec()
+    ref = api.build(spec).run().metrics
+
+    ck = str(tmp_path / "ck")
+    seen = []
+
+    def bomb(point):
+        seen.append(point)
+        if len(seen) == 2:
+            raise Abort
+
+    with pytest.raises(Abort):
+        api.build(spec).run(on_eval=bomb, checkpoint_dir=ck)
+    steps = [p for p in os.listdir(os.path.join(ck, "engine"))
+             if p.startswith("step_")]
+    assert steps, "the interrupted run left no engine snapshot"
+
+    run = api.build(spec)
+    res = run.run(checkpoint_dir=ck, resume_engine=True)
+    assert _fields(res.metrics) == _fields(ref)
+    # the resumed trajectory is the *whole* run, not just the tail: the
+    # snapshot carries the metrics recorded before the crash
+    assert len(res.metrics.acc) == len(ref.acc) > 2
+    # zero extra recompiles: restored device state hits the executor's
+    # existing compile-cache entries (env is shared via the api cache)
+    assert all(v == 1 for v in run.env.executor().trace_counts.values())
+
+
+def test_resume_from_final_snapshot_is_a_noop_replay(tmp_path):
+    """Resuming a run that actually finished restores the final snapshot
+    and exits the loop immediately — same trajectory, no extra work."""
+    spec = _spec(checkpoint_every=TOTAL)   # snapshot lands at the end
+    ck = str(tmp_path / "ck")
+    ref = api.build(spec).run(checkpoint_dir=ck).metrics
+    res = api.build(spec).run(checkpoint_dir=ck, resume_engine=True)
+    assert _fields(res.metrics) == _fields(ref)
+
+
+def test_resume_guards(tmp_path):
+    spec = _spec()
+    with pytest.raises(api.SpecError, match="resume_engine"):
+        api.build(spec).run(resume_engine=True)   # no checkpoint_dir
+    with pytest.raises(api.SpecError, match="no spec.json"):
+        api.build(spec).run(checkpoint_dir=str(tmp_path / "empty"),
+                            resume_engine=True)
+    # a different spec may not resume (or even checkpoint) into the dir
+    ck = str(tmp_path / "ck")
+    api.build(spec).run(checkpoint_dir=ck)
+    other = _spec(seed=9)
+    with pytest.raises(api.SpecError, match="holds snapshots written by"):
+        api.build(other).run(checkpoint_dir=ck)
+    # specs without engine checkpointing reject resume_engine outright
+    plain = api.ExperimentSpec.from_dict(spec.to_dict()).with_overrides(
+        {"faults.checkpoint_every": 0})
+    with pytest.raises(api.SpecError, match="resume_engine"):
+        api.build(plain).run(checkpoint_dir=str(tmp_path / "ck2"),
+                             resume_engine=True)
+
+
+def test_snapshot_covers_retiering_and_blackouts(tmp_path):
+    """Resume under the *full* fault surface: drifting tier maps and a
+    blackout both ride the snapshot (the tier map and fault-stream
+    position are part of engine state)."""
+    spec = _spec(blackouts=1, blackout_window=(1.0, 30.0),
+                 blackout_duration=15.0, nan_rate=0.3).with_overrides(
+        {"tiers.retier_every": 3})
+    ref = api.build(spec).run().metrics
+
+    ck = str(tmp_path / "ck")
+    seen = []
+
+    def bomb(point):
+        seen.append(point)
+        if len(seen) == 2:
+            raise Abort
+
+    with pytest.raises(Abort):
+        api.build(spec).run(on_eval=bomb, checkpoint_dir=ck)
+    res = api.build(spec).run(checkpoint_dir=ck, resume_engine=True)
+    assert _fields(res.metrics) == _fields(ref)
+    assert np.isfinite(res.metrics.acc).all()
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "fedasync"])
+def test_resume_covers_every_strategy(tmp_path, strategy):
+    spec = _spec().with_overrides({"strategy.name": strategy,
+                                   "strategy.kwargs": {}})
+    ref = api.build(spec).run().metrics
+    ck = str(tmp_path / "ck")
+    seen = []
+
+    def bomb(point):
+        seen.append(point)
+        if len(seen) == 2:
+            raise Abort
+
+    with pytest.raises(Abort):
+        api.build(spec).run(on_eval=bomb, checkpoint_dir=ck)
+    res = api.build(spec).run(checkpoint_dir=ck, resume_engine=True)
+    assert _fields(res.metrics) == _fields(ref)
+
+
+# ---------------------------------------------------------------------------
+# the chaos test: SIGKILL a real process mid-run, resume, compare hashes
+# ---------------------------------------------------------------------------
+
+def _cli_args(spec_path, ck, out):
+    return [sys.executable, "-m", "repro.api.cli",
+            "--spec", spec_path, "--checkpoint-dir", ck, "--out", out]
+
+
+def test_sigkill_mid_run_resumes_to_identical_trajectory(tmp_path):
+    spec = _spec()
+    ref_hash = _traj_hash(api.build(spec).run().metrics)
+
+    spec_path = str(tmp_path / "exp.json")
+    with open(spec_path, "w") as f:
+        f.write(spec.to_json())
+    ck, out = str(tmp_path / "ck"), str(tmp_path / "out.json")
+    env = dict(os.environ,
+               PYTHONPATH="src", JAX_PLATFORMS="cpu",
+               XLA_FLAGS="--xla_force_host_platform_device_count=1")
+
+    proc = subprocess.Popen(_cli_args(spec_path, ck, out), env=env,
+                            cwd=os.path.dirname(os.path.dirname(
+                                os.path.abspath(__file__))),
+                            stdout=subprocess.DEVNULL,
+                            stderr=subprocess.DEVNULL)
+    # wait for the first engine snapshot to land, then kill -9
+    eng = os.path.join(ck, "engine")
+    deadline = time.time() + 180
+    while time.time() < deadline and proc.poll() is None:
+        if os.path.isdir(eng) and any(p.startswith("step_")
+                                      for p in os.listdir(eng)):
+            break
+        time.sleep(0.05)
+    try:
+        os.kill(proc.pid, signal.SIGKILL)
+    except ProcessLookupError:
+        pass  # finished before we could kill it: resume still must agree
+    proc.wait()
+    assert os.path.isdir(eng) and any(p.startswith("step_")
+                                      for p in os.listdir(eng)), \
+        "no engine snapshot appeared before the deadline"
+
+    r = subprocess.run(_cli_args(spec_path, ck, out) + ["--resume"],
+                       env=env, cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))),
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    with open(out) as f:
+        doc = json.load(f)
+    traj = doc["runs"][0]["trajectory"]
+    got = hashlib.sha256(
+        json.dumps(traj, sort_keys=True).encode()).hexdigest()
+    assert got == ref_hash, (
+        "resumed trajectory diverged from the uninterrupted run")

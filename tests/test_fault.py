@@ -59,6 +59,38 @@ def test_failure_restores_from_checkpoint(tmp_path):
     assert r.stats["restores"] == 1
 
 
+def test_backoff_is_clock_injectable_and_deterministic(tmp_path):
+    """The retry/backoff path never touches the real clock: with an
+    injected sleep/clock the whole injected-failure schedule — which
+    attempts fail, how many retries each batch takes, and every backoff
+    duration — is an exact replay of the runner's seeded rng stream."""
+    rate, seed, n_steps = 0.35, 42, 30
+
+    # reference simulation of the runner's draw discipline: one
+    # rng.random() per attempt, retries reset per batch, no checkpoint
+    # exists (ckpt_every > n_steps) so a failure retries in place
+    rng = np.random.default_rng(seed)
+    expected_sleeps, expected_failures = [], 0
+    for _ in range(n_steps):
+        retries = 0
+        while rng.random() < rate:
+            expected_failures += 1
+            retries += 1
+            expected_sleeps.append(min(0.05 * 2 ** retries, 1.0))
+
+    sleeps, ticks = [], itertools.count()
+    r = GuardedRunner(_step_fn, CheckpointManager(str(tmp_path)),
+                      ckpt_every=10_000, max_retries=50,
+                      inject_failure_rate=rate, seed=seed,
+                      sleep=sleeps.append,
+                      clock=lambda: next(ticks) * 0.01)
+    state, end = r.run({"x": jnp.asarray(0.0)}, _batches(), n_steps)
+    assert end == n_steps
+    assert float(state["x"]) == float(n_steps)
+    assert r.stats["failures"] == expected_failures > 0
+    assert sleeps == expected_sleeps
+
+
 def test_straggler_detection():
     st = StragglerStats(threshold=2.0)
     for _ in range(20):

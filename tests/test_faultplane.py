@@ -1,0 +1,299 @@
+"""Deterministic fault plane (core/faults.py + spec faults section):
+churn windows, tier blackouts, the update validation gate, and the
+elastic Eq. 3 renormalization it rides on.  The zero-fault side of the
+contract — specs with the default faults section are bitwise the
+pre-fault-plane engine — is pinned by tests/test_engine_parity.py."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import aggregation
+from repro.core import faults
+from repro.core import steps as fl_steps
+from repro.core.simulation import SimEnv
+from repro.runtime import elastic
+
+
+def _spec(**faults_kwargs):
+    """Small 2-tier scenario; faults_kwargs populate the faults section."""
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_clients=8, samples_per_client=24, image_hw=8),
+        tiers=api.TierSpec(n_tiers=2, clients_per_round=2, n_unstable=0),
+        engine=api.EngineSpec(total_updates=8, eval_every=2,
+                              local_epochs=1),
+        faults=api.FaultSpec(**faults_kwargs))
+
+
+# ---------------------------------------------------------------------------
+# spec surface
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_round_trip_and_validation():
+    spec = _spec(churn_rate=0.3, blackouts=2, nan_rate=0.1,
+                 update_clip=10.0, checkpoint_every=5, seed=3)
+    back = api.ExperimentSpec.from_json(spec.to_json())
+    assert back == spec and back.hash() == spec.hash()
+    # windows arrive as lists from JSON but compare as tuples
+    assert isinstance(back.faults.churn_window, tuple)
+    for bad, msg in [({"churn_rate": 1.5}, "churn_rate"),
+                     ({"nan_rate": -0.1}, "nan_rate"),
+                     ({"blackouts": -1}, "blackouts"),
+                     ({"churn_downtime": 0.0}, "churn_downtime"),
+                     ({"blackout_window": (40.0, 10.0)}, "blackout_window"),
+                     ({"update_clip": -1.0}, "update_clip"),
+                     ({"checkpoint_every": -2}, "checkpoint_every")]:
+        with pytest.raises(api.SpecError, match=msg):
+            _spec(**bad).validate()
+
+
+def test_zero_fault_spec_builds_faultless_engine_config():
+    """The default faults section must not even *construct* a FaultPlane:
+    cfg.faults stays None, so the engine loop and the environment's
+    alive() are byte-for-byte the pre-fault-plane code paths."""
+    run = api.build(_spec())
+    assert run.cfg.faults is None
+    assert run.env.churn_down is None
+    # checkpoint_every alone activates the config (for snapshots) but
+    # must not inject faults
+    run2 = api.build(_spec(checkpoint_every=4))
+    assert run2.cfg.faults is not None
+    assert not run2.cfg.faults.injects_faults
+
+
+# ---------------------------------------------------------------------------
+# churn schedule + env liveness
+# ---------------------------------------------------------------------------
+
+def test_churn_schedule_off_and_shapes():
+    assert faults.churn_schedule(8, 0.0, 2, 30.0, (50.0, 400.0), 0) is None
+    assert faults.churn_schedule(8, 0.5, 0, 30.0, (50.0, 400.0), 0) is None
+    starts, ends = faults.churn_schedule(64, 0.5, 3, 30.0, (50.0, 400.0), 1)
+    assert starts.shape == ends.shape == (64, 3)
+    churners = np.isfinite(starts).all(axis=1)
+    assert 0 < churners.sum() < 64
+    # non-churners never go down; churners' windows sit inside the spec'd
+    # onset window with positive durations, onsets sorted per client
+    assert np.isinf(starts[~churners]).all()
+    s, e = starts[churners], ends[churners]
+    assert (s >= 50.0).all() and (s <= 400.0).all()
+    assert (e > s).all()
+    assert (np.diff(s, axis=1) >= 0).all()
+    # dedicated stream: same seed -> same schedule, bitwise
+    s2, e2 = faults.churn_schedule(64, 0.5, 3, 30.0, (50.0, 400.0), 1)
+    assert np.array_equal(s, s2[churners]) and np.array_equal(e, e2[churners])
+
+
+def test_env_alive_applies_churn_windows():
+    env = SimEnv(_spec(churn_rate=1.0, churn_events=1, churn_downtime=20.0,
+                       churn_window=(10.0, 11.0)).to_sim_config())
+    starts, ends = env.churn_down
+    assert env.alive(0.0).all()             # windows start at >= 10
+    t_mid = float(starts[0, 0]) + 1e-3
+    assert not env.alive(t_mid)[0]          # inside its down window
+    assert env.alive(float(ends[0, 0]) + 1e-3)[0]   # back up afterwards
+    # churn layers *on top of* permanent dropout, never revives it
+    down_forever = env.dropout_at <= float(ends.max()) + 1.0
+    assert not (env.alive(float(ends.max()) + 1.0) & down_forever).any()
+
+
+def test_churn_changes_trajectory_deterministically():
+    base = api.build(_spec()).run().metrics
+    churny = _spec(churn_rate=0.8, churn_events=2, churn_downtime=40.0,
+                   churn_window=(1.0, 60.0))
+    m1 = api.build(churny).run().metrics
+    m2 = api.build(churny).run().metrics
+    assert m1.times == m2.times and m1.acc == m2.acc  # reproducible
+    assert m1.times != base.times or m1.acc != base.acc  # and distinct
+
+
+# ---------------------------------------------------------------------------
+# blackouts + elastic Eq. 3 renormalization
+# ---------------------------------------------------------------------------
+
+def test_blackout_run_is_deterministic_and_finite():
+    spec = _spec(blackouts=1, blackout_window=(1.0, 30.0),
+                 blackout_duration=15.0)
+    run = api.build(spec)
+    assert run.cfg.faults.blackouts == 1
+    m1 = run.run().metrics
+    m2 = api.build(spec).run().metrics
+    assert m1.times == m2.times and m1.acc == m2.acc
+    assert np.isfinite(m1.acc).all()
+    # the strategy ends with every tier back up (blackout windows are
+    # short); tier state was bootstrapped, not left dark
+    assert run.strategy.tier_alive.all()
+
+
+def test_blackout_schedule_is_pure_function_of_config():
+    cfg = faults.FaultConfig(blackouts=3, blackout_window=(10.0, 100.0),
+                             blackout_duration=20.0, seed=7)
+    p1, p2 = faults.FaultPlane(cfg, 4), faults.FaultPlane(cfg, 4)
+    assert p1.blackout_events == p2.blackout_events
+    assert len(p1.blackout_events) == 3
+    for t0, t1, m in p1.blackout_events:
+        assert 10.0 <= t0 <= 100.0 and t1 == t0 + 20.0 and 0 <= m < 4
+
+
+def test_masked_cross_weights_renormalize_over_survivors():
+    counts = np.array([5, 3, 2, 7], np.int64)
+    alive = np.array([True, False, True, True])
+    w = elastic.masked_cross_weights(counts, alive)
+    assert w[1] == 0.0
+    assert np.isclose(w.sum(), 1.0)
+    # survivors carry the paper's reversed-count weights *as if only they
+    # existed* — bitwise against Eq. 3 over the compressed counts
+    assert np.array_equal(
+        w[alive], aggregation.cross_tier_weights_host(counts[alive]))
+    # all-alive degenerates to the unmasked Eq. 3 weights exactly
+    all_on = np.ones(4, bool)
+    assert np.array_equal(elastic.masked_cross_weights(counts, all_on),
+                          aggregation.cross_tier_weights_host(counts))
+    assert elastic.masked_cross_weights(counts, np.zeros(4, bool)).sum() == 0
+
+
+def test_bootstrap_tier_overwrites_one_slot():
+    tier_models = {"w": jnp.arange(12.0).reshape(3, 4)}
+    w_global = {"w": jnp.full((4,), -1.0)}
+    out = elastic.bootstrap_tier(tier_models, w_global, 1)
+    assert np.array_equal(np.asarray(out["w"][1]), np.full(4, -1.0))
+    assert np.array_equal(np.asarray(out["w"][0]),
+                          np.asarray(tier_models["w"][0]))
+    assert np.array_equal(np.asarray(out["w"][2]),
+                          np.asarray(tier_models["w"][2]))
+
+
+def test_shrink_grow_roundtrip_keeps_survivors_bitwise():
+    """Losing a tier and re-adding one keeps the surviving tiers' params
+    untouched (satellite: elastic coverage) and the newcomer lands on the
+    Eq. 3 global model with zero count."""
+    state = {
+        "params": {"w": jnp.arange(12.0).reshape(4, 3)},
+        "opt": {"m": jnp.ones((4, 3))},
+        "step": jnp.full((4,), 7, jnp.int32),
+        "counts": jnp.asarray([1.0, 2.0, 3.0, 4.0], jnp.float32),
+    }
+    shrunk = elastic.shrink_pods(state, keep=[0, 2, 3])
+    grown = elastic.grow_pods(shrunk, 1)
+    assert np.array_equal(np.asarray(grown["params"]["w"][:3]),
+                          np.asarray(state["params"]["w"])[[0, 2, 3]])
+    assert float(grown["counts"][-1]) == 0.0
+    assert grown["params"]["w"].shape == (4, 3)
+    w_expect = aggregation.global_model(shrunk["params"],
+                                        shrunk["counts"])["w"]
+    np.testing.assert_allclose(np.asarray(grown["params"]["w"][-1]),
+                               np.asarray(w_expect), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# update validation gate
+# ---------------------------------------------------------------------------
+
+def _stacked(vals):
+    return {"w": jnp.asarray(vals, jnp.float32)}
+
+
+def test_gate_zero_weights_nan_clients_and_renormalizes():
+    params = _stacked([[1.0, 1.0], [np.nan, 2.0], [3.0, 3.0]])
+    w = jnp.asarray([0.5, 0.25, 0.25])
+    ref = {"w": jnp.zeros(2)}
+    clean, gw, any_ok = fl_steps.gate_updates(params, w, ref, 0.0)
+    assert bool(any_ok)
+    gw = np.asarray(gw)
+    assert gw[1] == 0.0 and np.isclose(gw.sum(), 1.0)
+    np.testing.assert_allclose(gw[[0, 2]], [2 / 3, 1 / 3])
+    # poisoned payload sanitized to ref: no NaN survives into the average
+    assert np.isfinite(np.asarray(clean["w"])).all()
+    np.testing.assert_array_equal(np.asarray(clean["w"][1]), [0.0, 0.0])
+
+
+def test_gate_all_nan_reports_no_survivors():
+    params = _stacked([[np.nan, 1.0], [2.0, np.inf]])
+    _, gw, any_ok = fl_steps.gate_updates(
+        params, jnp.asarray([0.5, 0.5]), {"w": jnp.zeros(2)}, 0.0)
+    assert not bool(any_ok)
+    assert np.asarray(gw).sum() == 0.0
+
+
+def test_gate_clips_update_norm():
+    ref = {"w": jnp.zeros(3)}
+    params = _stacked([[3.0, 4.0, 0.0], [0.1, 0.0, 0.0]])   # norms 5, 0.1
+    clean, _, _ = fl_steps.gate_updates(
+        params, jnp.asarray([0.5, 0.5]), ref, 1.0)
+    norms = np.linalg.norm(np.asarray(clean["w"]), axis=1)
+    np.testing.assert_allclose(norms, [1.0, 0.1], rtol=1e-5)
+    # direction preserved
+    np.testing.assert_allclose(np.asarray(clean["w"][0]),
+                               [0.6, 0.8, 0.0], rtol=1e-5)
+
+
+def test_poison_updates_masks_only_flagged_clients():
+    params = {"w": jnp.ones((3, 2)), "n": jnp.arange(3, dtype=jnp.int32)}
+    out = fl_steps.poison_updates(params, jnp.asarray([False, True, False]))
+    w = np.asarray(out["w"])
+    assert np.isnan(w[1]).all()
+    assert np.isfinite(w[[0, 2]]).all()
+    # integer leaves pass through untouched
+    assert np.array_equal(np.asarray(out["n"]), [0, 1, 2])
+
+
+def test_draw_poison_stream_is_replayable():
+    cfg = faults.FaultConfig(nan_rate=0.5, seed=11)
+    p1, p2 = faults.FaultPlane(cfg, 2), faults.FaultPlane(cfg, 2)
+    draws1 = [p1.draw_poison(3, 4) for _ in range(20)]
+    draws2 = [p2.draw_poison(3, 4) for _ in range(20)]
+    assert all(np.array_equal(a, b) for a, b in zip(draws1, draws2))
+    assert any(d.any() for d in draws1)       # some rounds poisoned
+    assert not all(d.any() for d in draws1)   # but not all
+    for d in draws1:
+        assert d.shape == (4,) and d.sum() <= 1 and not d[3:].any()
+
+
+def test_nan_clients_cannot_sink_the_global_model():
+    """Every round poisons one client; the gate keeps the whole
+    trajectory finite (the acceptance bar: one bad client degrades a
+    round, never the run)."""
+    spec = _spec(nan_rate=1.0)
+    res = api.build(spec).run()
+    assert np.isfinite(res.metrics.acc).all()
+    # and on fedavg too (same gate, different strategy wiring)
+    res2 = api.build(spec.with_overrides(
+        {"strategy.name": "fedavg", "strategy.kwargs": {}})).run()
+    assert np.isfinite(res2.metrics.acc).all()
+
+
+def test_gated_runs_are_deterministic_with_fixed_shapes():
+    """The gated round step keeps the executor's one-trace-per-config
+    contract: a full faulty run retraces nothing."""
+    spec = _spec(nan_rate=0.5, update_clip=25.0, blackouts=1,
+                 blackout_window=(1.0, 20.0), blackout_duration=10.0,
+                 churn_rate=0.5, churn_window=(1.0, 40.0),
+                 churn_downtime=15.0)
+    run = api.build(spec)
+    m1 = run.run().metrics
+    assert all(v == 1 for v in run.env.executor().trace_counts.values())
+    m2 = api.build(spec).run().metrics
+    assert m1.times == m2.times and m1.acc == m2.acc
+    assert np.isfinite(m1.acc).all()
+
+
+def test_fault_config_activity_flags():
+    assert not faults.FaultConfig().active
+    assert faults.FaultConfig(checkpoint_every=5).active
+    assert not faults.FaultConfig(checkpoint_every=5).injects_faults
+    for kw in ({"blackouts": 1}, {"nan_rate": 0.1}, {"update_clip": 1.0}):
+        assert faults.FaultConfig(**kw).injects_faults
+    # frozen: fault configs are hashable spec mirrors
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        faults.FaultConfig().nan_rate = 0.5
+
+
+def test_is_fault_event_discriminates_actor_tuples():
+    assert faults.is_fault_event((faults.BLACKOUT, 1, 20.0))
+    assert faults.is_fault_event((faults.RETURN, 0))
+    assert not faults.is_fault_event((0, np.arange(3)))   # round event
+    assert not faults.is_fault_event((3, 0))              # fedasync event
+    assert not faults.is_fault_event(5)
