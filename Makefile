@@ -3,8 +3,9 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-kernels test-faultplane bench-smoke bench-engine \
-	bench-roofline smoke-example smoke-lm smoke-fault docs check-docs
+.PHONY: test test-kernels test-faultplane test-serve bench-smoke \
+	bench-engine bench-roofline bench-serve smoke-example smoke-lm \
+	smoke-fault smoke-serve docs check-docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -20,6 +21,12 @@ test-kernels:
 # subprocess test)
 test-faultplane:
 	$(PY) -m pytest -q tests/test_faultplane.py tests/test_crash_resume.py
+
+# the serving plane as a required job of its own: prefill/decode bitwise
+# parity vs the training forward, continuous-batching conservation +
+# slot recycling, and spec-hash-addressed checkpoint loading
+test-serve:
+	$(PY) -m pytest -q tests/test_serve.py
 
 # regenerate the introspected ExperimentSpec reference (docs/SPEC.md)
 docs:
@@ -60,6 +67,21 @@ smoke-fault:
 	    --set faults.blackouts=1 --set 'faults.blackout_window=[1,20]' \
 	    --set faults.blackout_duration=10
 
+# train -> checkpoint -> serve through the CLI: 2 federated tiny_lm
+# rounds with --checkpoint-dir, then the `serve` subcommand resolves the
+# directory by spec hash and decodes a Poisson request stream (CI runs
+# this on every push)
+smoke-serve:
+	rm -rf /tmp/smoke_serve_ckpt
+	$(PY) -m repro.api.cli \
+	    --set data.model=tiny_lm --set data.n_clients=8 \
+	    --set data.samples_per_client=12 --set tiers.n_tiers=2 \
+	    --set tiers.clients_per_round=2 --set tiers.n_unstable=0 \
+	    --set engine.local_epochs=1 --set engine.total_updates=2 \
+	    --set engine.eval_every=2 --checkpoint-dir /tmp/smoke_serve_ckpt
+	$(PY) -m repro.api.cli serve --resume-from /tmp/smoke_serve_ckpt \
+	    --requests 6 --slots 3 --prompt-len 12 --max-new 6 --rate 25
+
 bench-smoke:
 	$(PY) -m benchmarks.run codec codec_e2e kernels
 
@@ -80,3 +102,12 @@ bench-roofline:
 bench-engine:
 	$(PY) -m benchmarks.run engine engine_scaled engine_lm \
 	    engine_faults engine_sharded --json BENCH_engine.json
+
+# serving-plane latency under open-loop Poisson load, from spec-hash-
+# verified federated checkpoints (train -> checkpoint -> load -> serve):
+# p50/p95/p99 latency + TTFT + tok/s per load level into
+# BENCH_serve.json.  SMOKE=1 shrinks rounds/requests (the CI push
+# workflow runs `make bench-serve SMOKE=1`).
+bench-serve:
+	$(PY) -m benchmarks.serve_bench $(if $(SMOKE),--smoke) \
+	    --json BENCH_serve.json

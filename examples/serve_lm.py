@@ -1,43 +1,62 @@
-"""Serve a small model with batched requests + continuous batching.
+"""Train a federated LM, checkpoint it, then serve that checkpoint.
 
-    PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-2.7b]
+    PYTHONPATH=src python examples/serve_lm.py
 
-Uses the reduced (smoke) config of the chosen architecture so it runs on
-CPU; the same Server class drives the full configs on TPU.
+The full production path in ~60 lines: a declarative ExperimentSpec
+trains ``tiny_lm`` for two federated rounds, ``Run.run`` writes the
+params plus a ``spec.json`` provenance sidecar, and the serving plane
+resolves the directory by spec hash — refusing silently-wrong weights —
+before decoding live requests with continuous batching.
 """
 import argparse
-import time
+import tempfile
 
-import numpy as np
-
-from repro.configs.registry import get_smoke_config
-from repro.launch.serve import Request, Server
+from repro import api
+from repro.serve import (ServeEngine, ServeSpec, load_checkpoint,
+                         make_requests, report)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="zamba2-2.7b")
-    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (req/s); 0 = closed burst")
     args = ap.parse_args()
 
-    cfg = get_smoke_config(args.arch)
-    rng = np.random.default_rng(0)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
-                                    int(rng.integers(4, 24))),
-                    args.max_new)
-            for i in range(args.requests)]
-    server = Server(cfg, batch_slots=args.slots, max_len=128)
-    t0 = time.time()
-    done, steps = server.run(reqs)
-    dt = time.time() - t0
-    toks = sum(len(r.out) for r in done)
-    print(f"arch={cfg.name}: served {len(done)} requests "
-          f"({toks} tokens) in {dt:.1f}s over {steps} decode steps "
-          f"with {args.slots} slots (continuous batching)")
-    for r in done[:3]:
-        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out}")
+    spec = api.ExperimentSpec().with_overrides({
+        "data.model": "tiny_lm", "data.n_clients": 8,
+        "tiers.n_tiers": 2, "tiers.n_unstable": 0,
+        "tiers.clients_per_round": 2,
+        "engine.total_updates": args.rounds,
+    }).validate()
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        print(f"training spec {spec.hash()} for {args.rounds} rounds ...")
+        res = api.build(spec).run(checkpoint_dir=ckpt_dir)
+        print(f"  final acc {res.metrics.summary()['best_acc']:.3f}; "
+              f"checkpoint -> {ckpt_dir}")
+
+        loaded = load_checkpoint(ckpt_dir, expect_spec=spec)
+        print(f"loaded {loaded.spec.data.model} @ spec {loaded.spec_hash} "
+              f"(step {loaded.step})")
+
+        sspec = ServeSpec(slots=args.slots, max_len=64, prefill_len=16,
+                          max_new=args.max_new)
+        reqs = make_requests(args.requests, args.rate, sspec.prefill_len,
+                             args.max_new, loaded.config.vocab_size, seed=0)
+        engine = ServeEngine(loaded.config, loaded.lm_params, sspec)
+        done = engine.run(reqs)
+
+    r = report(done)
+    print(f"served {r['requests']} requests ({r['tokens']} tokens) at "
+          f"{r['tok_per_s']:.1f} tok/s — p50/p95 latency "
+          f"{r['latency_p50_s']:.3f}/{r['latency_p95_s']:.3f}s "
+          f"(traces: {engine.trace_counts})")
+    for req in done[:3]:
+        print(f"  req {req.rid}: prompt[{len(req.prompt)}] -> {req.out}")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 sys.path.insert(0, os.path.join(REPO, "src"))
 
 from repro.api import spec as spec_mod                       # noqa: E402
+from repro.serve import spec as serve_spec_mod               # noqa: E402
 from repro.compress import transport                         # noqa: E402
 from repro.core import strategies                            # noqa: E402
 from repro.data import federated                             # noqa: E402
@@ -202,7 +203,17 @@ def build() -> str:
     ]
     body = [section_md(name, cls)
             for name, cls in spec_mod._SECTIONS.items()]
-    return "\n".join(head + body + [registries_md()])
+    serve = [
+        "## `serve` — ServeSpec (serving plane, not an ExperimentSpec "
+        "section)",
+        "",
+        " ".join((inspect.getdoc(serve_spec_mod) or "")
+                 .split("\n\n")[0].split()),
+        "",
+        section_md("serve", serve_spec_mod.ServeSpec)
+        .split("\n", 2)[2],  # drop the duplicate header, keep the table
+    ]
+    return "\n".join(head + body + serve + [registries_md()])
 
 
 def main() -> None:

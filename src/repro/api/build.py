@@ -104,29 +104,27 @@ def _engine_ckpt_dir(checkpoint_dir: str, spec: ExperimentSpec,
     guarded by a spec-hash sidecar: resuming an engine snapshot under a
     *different* spec would silently splice two configurations into one
     trajectory, so a mismatch is an actionable :class:`SpecError`."""
+    from repro import checkpoint as ckpt
     eng = os.path.join(checkpoint_dir, "engine")
     os.makedirs(eng, exist_ok=True)
-    sidecar = os.path.join(eng, "spec.json")
-    if os.path.exists(sidecar):
-        with open(sidecar) as f:
-            saved = json.load(f)
-        if saved.get("spec_hash") != spec.hash():
+    try:
+        saved = ckpt.read_sidecar(eng)
+    except FileNotFoundError:
+        if resume:
             raise SpecError(
-                f"engine checkpoint dir {eng!r} holds snapshots written by "
-                f"spec {saved.get('spec_hash')} but the current spec hashes "
-                f"to {spec.hash()}; point checkpoint_dir somewhere fresh or "
-                f"load the matching spec from {sidecar!r}")
-    elif resume:
+                f"resume_engine=True but {eng!r} has no {ckpt.SIDECAR} — "
+                f"nothing was ever checkpointed there (run with "
+                f"checkpoint_dir= and faults.checkpoint_every > 0 first)")
+        ckpt.write_sidecar(eng, {"spec_hash": spec.hash(),
+                                 "spec": spec.to_dict()})
+        return eng
+    if saved.get("spec_hash") != spec.hash():
         raise SpecError(
-            f"resume_engine=True but {eng!r} has no spec.json — nothing "
-            f"was ever checkpointed there (run with checkpoint_dir= and "
-            f"faults.checkpoint_every > 0 first)")
-    else:
-        tmp = sidecar + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"spec_hash": spec.hash(), "spec": spec.to_dict()},
-                      f, indent=2)
-        os.replace(tmp, sidecar)
+            f"engine checkpoint dir {eng!r} holds snapshots written by "
+            f"spec {saved.get('spec_hash')} but the current spec hashes "
+            f"to {spec.hash()}; point checkpoint_dir somewhere fresh or "
+            f"load the matching spec from "
+            f"{os.path.join(eng, ckpt.SIDECAR)!r}")
     return eng
 
 
@@ -216,51 +214,45 @@ def save_checkpoint(directory: str, spec: ExperimentSpec, params: Any,
     steps from a previous spec.
     """
     import shutil
-    from repro.checkpoint import CheckpointManager
-    mgr = CheckpointManager(directory)
+    from repro import checkpoint as ckpt
+    mgr = ckpt.CheckpointManager(directory)
     for s in mgr.all_steps():
         if s != step:
             shutil.rmtree(os.path.join(directory, f"step_{s:010d}"),
                           ignore_errors=True)
     mgr.save(step, {"params": params}, blocking=True)
-    sidecar = os.path.join(directory, "spec.json")
-    tmp = sidecar + ".tmp"
-    with open(tmp, "w") as f:
-        # "step" binds the sidecar to the exact step it describes: the
-        # manager keeps the last k steps, so a reused directory may hold
-        # stale steps written by other specs
-        json.dump({"spec_hash": spec.hash(), "step": step,
-                   "spec": spec.to_dict()}, f, indent=2)
-    os.replace(tmp, sidecar)  # atomic, like the checkpoint itself
+    # "step" binds the sidecar to the exact step it describes: the
+    # manager keeps the last k steps, so a reused directory may hold
+    # stale steps written by other specs
+    ckpt.write_sidecar(directory, {"spec_hash": spec.hash(), "step": step,
+                                   "spec": spec.to_dict()})
 
 
 def _load_checkpoint(directory: str, spec: ExperimentSpec,
                      env: SimEnv) -> Any:
     """Restore params for ``spec`` from ``directory``; spec-hash mismatch
     (or a missing/corrupt checkpoint) is an actionable SpecError."""
-    from repro.checkpoint import CheckpointManager
-    sidecar = os.path.join(directory, "spec.json")
-    if not os.path.exists(sidecar):
-        raise SpecError(
-            f"no spec.json in checkpoint dir {directory!r}; expected a "
-            f"checkpoint written by Run.run(checkpoint_dir=...)")
+    from repro import checkpoint as ckpt
     try:
-        with open(sidecar) as f:
-            saved = json.load(f)
+        saved = ckpt.read_sidecar(directory)
+    except FileNotFoundError:
+        raise SpecError(
+            f"no {ckpt.SIDECAR} in checkpoint dir {directory!r}; expected "
+            f"a checkpoint written by Run.run(checkpoint_dir=...)")
     except (OSError, json.JSONDecodeError) as e:
-        raise SpecError(f"unreadable spec.json in checkpoint dir "
+        raise SpecError(f"unreadable {ckpt.SIDECAR} in checkpoint dir "
                         f"{directory!r}: {e}") from e
     if saved.get("spec_hash") != spec.hash():
         raise SpecError(
             f"checkpoint {directory!r} was written by spec "
             f"{saved.get('spec_hash')} but the current spec hashes to "
-            f"{spec.hash()}; load the matching spec from "
-            f"{sidecar!r} (api.ExperimentSpec.from_dict(doc['spec'])) or "
-            f"point resume_from at a checkpoint of this spec")
+            f"{spec.hash()}; load the matching spec from its "
+            f"{ckpt.SIDECAR} (api.ExperimentSpec.from_dict(doc['spec'])) "
+            f"or point resume_from at a checkpoint of this spec")
     try:
         # restore the exact step the sidecar describes — never "latest",
         # which in a reused directory could be another spec's params
-        state, _ = CheckpointManager(directory).restore(
+        state, _ = ckpt.CheckpointManager(directory).restore(
             like={"params": env.params0}, step=saved.get("step"))
     except FileNotFoundError as e:
         raise SpecError(f"checkpoint dir {directory!r} has a spec.json "

@@ -26,6 +26,13 @@ With ``faults.checkpoint_every > 0`` the run also snapshots full engine
 state under ``<checkpoint-dir>/engine``, and ``--resume`` replays a
 killed run from the newest snapshot to a bitwise-identical trajectory.
 
+Serving: ``repro.api.cli serve --resume-from DIR`` loads a
+``--checkpoint-dir`` checkpoint (spec-hash verified against its
+``spec.json`` sidecar), rebuilds the registry model from the embedded
+spec, and serves it with the continuous-batching engine under open-loop
+Poisson load (``--rate``), printing p50/p95/p99 latency and tok/s
+(``--out`` writes the full report as JSON).
+
 Client-sharded execution: ``--set mesh.kind=host`` runs the fused round
 step sharded over however many local devices exist (force N CPU devices
 with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before*
@@ -77,7 +84,70 @@ def _print_row(res: api.Result) -> None:
           f"t={s['sim_time']:7.0f}s  {s['total_mb']:7.1f}MB", flush=True)
 
 
+def _serve_main(argv: List[str]) -> Dict[str, Any]:
+    """``repro.api.cli serve --resume-from DIR``: load a spec-hash-verified
+    federated checkpoint and serve it under open-loop Poisson load."""
+    from repro import serve as serving
+
+    ap = argparse.ArgumentParser(
+        prog="repro.api.cli serve",
+        description="Serve a federated checkpoint (continuous batching).")
+    ap.add_argument("--resume-from", metavar="DIR", required=True,
+                    help="checkpoint dir written by --checkpoint-dir; its "
+                         "spec.json sidecar names the model + spec hash")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = closed burst")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="position budget per slot "
+                         "(0 = prompt-len + 4*max-new)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", metavar="FILE",
+                    help="write the latency/throughput report as JSON")
+    args = ap.parse_args(argv)
+
+    try:
+        loaded = serving.load_checkpoint(args.resume_from)
+        cfg = loaded.config
+        max_len = args.max_len or (args.prompt_len + 4 * args.max_new)
+        spec = serving.ServeSpec(slots=args.slots, max_len=max_len,
+                                 prefill_len=min(args.prompt_len, max_len),
+                                 max_new=args.max_new, seed=args.seed)
+        reqs = serving.make_requests(args.requests, args.rate,
+                                     spec.prefill_len, args.max_new,
+                                     cfg.vocab_size, args.seed)
+        engine = serving.ServeEngine(cfg, loaded.lm_params, spec)
+        done = engine.run(reqs)
+    except api.SpecError as e:
+        raise SystemExit(f"spec error: {e}")
+
+    rep = serving.report(done)
+    rep.update(spec_hash=loaded.spec_hash, step=loaded.step,
+               model=loaded.spec.data.model, rate=args.rate,
+               traces=dict(engine.trace_counts))
+    print(f"serving {rep['model']} @ spec {rep['spec_hash']} "
+          f"(step {rep['step']})")
+    print(f"  {rep['requests']} requests ({rep['truncated']} truncated)  "
+          f"{rep['tok_per_s']:.1f} tok/s  "
+          f"p50/p95/p99 latency {rep['latency_p50_s']:.3f}/"
+          f"{rep['latency_p95_s']:.3f}/{rep['latency_p99_s']:.3f}s",
+          flush=True)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rep, f, indent=2)
+        print(f"wrote {args.out}", file=sys.stderr)
+    return rep
+
+
 def main(argv: List[str] = None) -> List[api.Result]:
+    if argv is None:
+        argv = sys.argv[1:]
+    if argv and argv[0] == "serve":
+        _serve_main(argv[1:])
+        return []
     ap = argparse.ArgumentParser(
         prog="repro.api.cli",
         description="Run declarative FL experiments (ExperimentSpec).")

@@ -1,1 +1,6 @@
-from repro.checkpoint.ckpt import CheckpointManager  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointManager,
+    SIDECAR,
+    read_sidecar,
+    write_sidecar,
+)

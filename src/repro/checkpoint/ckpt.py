@@ -39,6 +39,34 @@ def _treedef_token(tree) -> str:
     return str(jax.tree_util.tree_structure(tree))
 
 
+#: the spec-provenance sidecar written next to param / engine-state
+#: checkpoints; binds the directory's contents to exactly one spec hash
+SIDECAR = "spec.json"
+
+
+def write_sidecar(directory: str, payload: Dict[str, Any]) -> str:
+    """Atomically write the spec sidecar (tmp + rename, like the
+    checkpoint itself); returns the sidecar path."""
+    sidecar = os.path.join(directory, SIDECAR)
+    tmp = sidecar + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=2)
+    os.replace(tmp, sidecar)
+    return sidecar
+
+
+def read_sidecar(directory: str) -> Dict[str, Any]:
+    """The sidecar document, or FileNotFoundError when the directory was
+    never checkpointed into (OSError / json.JSONDecodeError propagate for
+    an unreadable one — callers turn them into actionable errors)."""
+    sidecar = os.path.join(directory, SIDECAR)
+    if not os.path.exists(sidecar):
+        raise FileNotFoundError(
+            f"no {SIDECAR} in checkpoint dir {directory!r}")
+    with open(sidecar) as f:
+        return json.load(f)
+
+
 def _fsync_path(path: str) -> None:
     """fsync a file or directory by path (directory fsync commits the
     rename itself — the atomic-save guarantee is only as durable as the

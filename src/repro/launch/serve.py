@@ -1,15 +1,20 @@
-"""Serving driver: batched prefill + decode with continuous batching.
+"""Serving driver: thin shim over the serving plane (repro.serve).
 
-A minimal production-shaped server loop: requests (prompt token arrays)
-queue up, get packed into fixed-size batches, prefilled once, then decoded
-step-by-step; finished sequences free their slot for queued requests
-(continuous batching).  Works with every decoder arch in the registry —
-KV-cache layouts (full / sliding-window ring / SSM state / hybrid) are
-handled by lm.init_cache.
+``main`` drives :class:`repro.serve.engine.ServeEngine` — fixed-slot
+continuous batching with per-slot positions, exact prompt handoff, and
+cache-row reset on slot recycle — over any decoder arch in the registry
+(KV-cache layouts full / sliding-window ring / SSM state / hybrid are
+handled by lm.init_cache).
 
 Example (CPU):
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
       --requests 8 --max-new 16
+
+The original prototype :class:`Server` is kept below for API
+compatibility; the engine supersedes it (the prototype shares one
+position counter across slots, so a recycled slot continues at its
+neighbours' RoPE offset — tolerable for throughput smoke tests, wrong
+for parity: see DESIGN.md §Serving-plane).
 """
 from __future__ import annotations
 
@@ -17,16 +22,15 @@ import argparse
 import dataclasses
 import logging
 import time
-from typing import List, Optional
+from collections import deque
+from typing import Deque, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config
-from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import lm
-from repro.runtime import sharding as shd
 
 log = logging.getLogger("repro.serve")
 
@@ -37,6 +41,8 @@ class Request:
     prompt: np.ndarray
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
+    #: True when the server's max_len cut generation short of max_new
+    truncated: bool = False
 
     @property
     def done(self) -> bool:
@@ -44,12 +50,14 @@ class Request:
 
 
 class Server:
-    """Fixed-slot continuous-batching decoder."""
+    """Fixed-slot continuous-batching decoder (prototype; see module
+    docstring — new code should use :class:`repro.serve.ServeEngine`)."""
 
     def __init__(self, cfg, batch_slots: int, max_len: int, tp: int = 1,
                  seed: int = 0, dtype=jnp.float32):
         self.cfg = cfg
         self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pending: List[Deque[int]] = [deque() for _ in range(batch_slots)]
         self.max_len = max_len
         self.tp = tp
         self.params = lm.init_params(cfg, jax.random.PRNGKey(seed), tp, dtype)
@@ -61,7 +69,7 @@ class Server:
             lambda p, t, po, c: lm.serve_step(cfg, p, t, po, tp, c))
 
     # -- batched service loop ------------------------------------------------
-    def run(self, requests: List[Request]) -> List[Request]:
+    def run(self, requests: List[Request]) -> Tuple[List[Request], int]:
         queue = list(requests)
         done: List[Request] = []
         B = len(self.slots)
@@ -93,19 +101,33 @@ class Server:
             for i, r in enumerate(self.slots):
                 if r is None:
                     continue
+                if self.pending[i]:
+                    # mid-handoff: this step consumed a prompt token, and
+                    # more remain — feed the next one, emit nothing
+                    next_tok[i] = self.pending[i].popleft()
+                    continue
                 r.out.append(int(next_tok[i]))
                 if r.done:
                     done.append(r)
-                    # continuous batching: hand the slot to a queued request
-                    # (its prompt decodes token-by-token into the live batch)
+                    # continuous batching: hand the slot to a queued
+                    # request; its *whole* prompt decodes token-by-token
+                    # into the live batch via the pending queue
                     self.slots[i] = queue.pop(0) if queue else None
                     if self.slots[i] is not None:
-                        next_tok[i] = self.slots[i].prompt[0]
-        done.extend(s for s in self.slots if s is not None)
+                        pending = deque(
+                            int(t) for t in self.slots[i].prompt)
+                        next_tok[i] = pending.popleft()
+                        self.pending[i] = pending
+        for s in self.slots:
+            if s is not None:
+                s.truncated = True  # max_len fired before max_new tokens
+                done.append(s)
         return done, steps
 
 
 def main(argv=None):
+    from repro.serve import ServeEngine, ServeRequest, ServeSpec, report
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="rwkv6-3b")
     ap.add_argument("--smoke", action="store_true")
@@ -121,17 +143,26 @@ def main(argv=None):
     if not cfg.is_decoder:
         raise SystemExit(f"{args.arch} is encoder-only: nothing to decode")
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
-                                    rng.integers(4, args.prompt_len + 1)),
-                    args.max_new) for i in range(args.requests)]
-    server = Server(cfg, args.slots,
-                    max_len=args.prompt_len + args.max_new * 4)
+    reqs = [ServeRequest(i, rng.integers(0, cfg.vocab_size,
+                                         rng.integers(4, args.prompt_len + 1)
+                                         ).astype(np.int32),
+                         args.max_new) for i in range(args.requests)]
+    spec = ServeSpec(slots=args.slots,
+                     max_len=args.prompt_len + args.max_new * 4,
+                     prefill_len=args.prompt_len, max_new=args.max_new,
+                     seed=args.seed)
+    params = lm.init_params(cfg, jax.random.PRNGKey(args.seed), tp=1,
+                            dtype=jnp.float32)
+    engine = ServeEngine(cfg, params, spec)
     t0 = time.time()
-    done, steps = server.run(reqs)
+    done = engine.run(reqs)
     dt = time.time() - t0
-    tput = sum(len(r.out) for r in done) / max(dt, 1e-9)
-    log.info("served %d requests, %d decode steps, %.1f tok/s",
-             len(done), steps, tput)
+    r = report(done)
+    log.info("served %d requests (%d truncated), %.1f tok/s, "
+             "p50 latency %.3fs (traces: %s)",
+             r["requests"], r["truncated"],
+             sum(len(q.out) for q in done) / max(dt, 1e-9),
+             r["latency_p50_s"], engine.trace_counts)
     return done
 
 

@@ -51,6 +51,14 @@ def resolve_attention_backend(cfg: ModelConfig, tp: int) -> str:
     return "flash"
 
 
+def _exact_attend(cfg: ModelConfig) -> bool:
+    """Use the shape-stable ``_attend`` formulation iff the spec asked
+    for the bitwise oracle by name.  ``auto``/``flash`` (and the tp>1
+    reference fallback) keep the faster dots — only an explicit
+    ``attention_backend="reference"`` buys cross-shape bitwise parity."""
+    return getattr(cfg, "attention_backend", "auto") == "reference"
+
+
 # ---------------------------------------------------------------------------
 # params
 # ---------------------------------------------------------------------------
@@ -132,9 +140,33 @@ def _project_qkv(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
     return q, k, v
 
 
-def _attend(q, k, v, mask):
-    """q: (B,C,kv,G,hd), k/v: (B,T,kv,hd), mask: (B?,C,T) bool -> (B,C,kv,G,hd)."""
+def _attend(q, k, v, mask, exact: bool = False):
+    """q: (B,C,kv,G,hd), k/v: (B,T,kv,hd), mask: (B?,C,T) bool -> (B,C,kv,G,hd).
+
+    ``exact`` selects a bitwise *shape-stable* evaluation: the two
+    contractions become broadcast-multiply + ``jnp.sum`` reductions
+    instead of ``dot_general``.  XLA's dot emission (kernel choice,
+    operand layouts, accumulation grouping) depends on the query-chunk
+    length, so a C=1 decode step rounds differently from the same
+    position inside a C=S prefill; an explicit last/penultimate-axis
+    reduce is emitted identically for every C.  This is what lets
+    serving's prefill+decode logits bitwise-match a full forward pass
+    (tests/test_serve.py).  The reference backend — the parity oracle —
+    pays the (fused, never materialized at (C,T,hd)) elementwise cost;
+    the flash path keeps the dots.
+    """
     scale = 1.0 / math.sqrt(q.shape[-1])
+    if exact:
+        # logits[b,k,g,c,t] = sum_h q[b,c,k,g,h] * k[b,t,k,h]
+        qx = q.transpose(0, 2, 3, 1, 4)[:, :, :, :, None, :]  # (B,kv,G,C,1,hd)
+        kx = k.transpose(0, 2, 1, 3)[:, :, None, None, :, :]  # (B,kv,1,1,T,hd)
+        logits = jnp.sum((qx * kx).astype(jnp.float32), axis=-1) * scale
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        # out[b,c,k,g,h] = sum_t probs[b,k,g,c,t] * v[b,t,k,h]
+        vx = v.transpose(0, 2, 1, 3)[:, :, None, None, :, :]  # (B,kv,1,1,T,hd)
+        out = jnp.sum(probs[..., None] * vx, axis=-2)         # (B,kv,G,C,hd)
+        return out.transpose(0, 3, 1, 2, 4)
     logits = jnp.einsum("bckgh,btkh->bkgct", q, k).astype(jnp.float32) * scale
     logits = jnp.where(mask[:, None, None], logits, NEG_INF)
     probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
@@ -173,8 +205,10 @@ def full_attention(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
             m = m & (pos_q[:, None] - pos_kv[None, :] < W)
         return m
 
+    exact = _exact_attend(cfg)
     if S <= C:
-        out = _attend(q, k, v, block_mask(positions, positions)[None])
+        out = _attend(q, k, v, block_mask(positions, positions)[None],
+                      exact=exact)
     else:
         n = -(-S // C)  # ceil: pad the query side to a chunk multiple
         Sp = n * C
@@ -192,12 +226,15 @@ def full_attention(cfg: ModelConfig, p, x: jax.Array, positions: jax.Array,
                 vs = jax.lax.dynamic_slice_in_dim(v, start, slab, axis=1)
                 pq = i * C + jnp.arange(C)
                 pkv = start + jnp.arange(slab)
-                return None, _attend(qi, ks, vs, block_mask(pq, pkv)[None])
+                return None, _attend(qi, ks, vs, block_mask(pq, pkv)[None],
+                                     exact=exact)
         else:
             def step(_, iq):
                 i, qi = iq
                 pq = i * C + jnp.arange(C)
-                return None, _attend(qi, k, v, block_mask(pq, positions)[None])
+                return None, _attend(qi, k, v,
+                                     block_mask(pq, positions)[None],
+                                     exact=exact)
 
         _, oc = jax.lax.scan(step, None, (jnp.arange(n), qc),
                              unroll=True if cfg.unroll_scans else 1)
@@ -243,25 +280,32 @@ def prefill_attention(cfg: ModelConfig, p, x, positions, tp: int,
 
 def decode_attention(cfg: ModelConfig, p, x: jax.Array, pos: jax.Array,
                      tp: int, cache: KVCache) -> Tuple[jax.Array, KVCache]:
-    """One-token decode. x: (B, 1, d), pos: scalar int32 (current position)."""
+    """One-token decode. x: (B, 1, d); pos: scalar int32, or (B,) int32 for
+    per-slot positions (continuous batching: a recycled slot restarts at 0
+    while its neighbours keep decoding — RoPE, the ring write, and the
+    validity mask all follow each slot's own position)."""
     B = x.shape[0]
     T = cache.k.shape[1]
-    positions = jnp.full((1,), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    pos_b = jnp.broadcast_to(pos, (B,)) if pos.ndim == 0 else pos  # (B,)
+    positions = pos_b[:, None]                                    # (B, 1)
     q, k, v = _project_qkv(cfg, p, x, positions, tp)  # q:(B,1,kv,G,hd)
 
-    slot = (pos % T).astype(jnp.int32)
+    slot = (pos_b % T).astype(jnp.int32)                          # (B,)
     iota = jnp.arange(T, dtype=jnp.int32)
-    hit = (iota == slot)[None, :, None, None]
+    hit_bt = iota[None, :] == slot[:, None]                       # (B, T)
+    hit = hit_bt[:, :, None, None]
     ck = jnp.where(hit, k.astype(cache.k.dtype), cache.k)
     cv = jnp.where(hit, v.astype(cache.v.dtype), cache.v)
-    cpos = jnp.where(iota[None, :] == slot, pos, cache.positions)
+    cpos = jnp.where(hit_bt, pos_b[:, None], cache.positions)
     ck = shd.shard(ck, *cache_axes(cfg, tp))
     cv = shd.shard(cv, *cache_axes(cfg, tp))
 
-    valid = (cpos >= 0) & (cpos <= pos)
+    valid = (cpos >= 0) & (cpos <= pos_b[:, None])
     if cfg.swa_window is not None:
-        valid = valid & (cpos > pos - cfg.swa_window)
-    out = _attend(q, ck.astype(x.dtype), cv.astype(x.dtype), valid[:, None, :])
+        valid = valid & (cpos > pos_b[:, None] - cfg.swa_window)
+    out = _attend(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                  valid[:, None, :], exact=_exact_attend(cfg))
     out = out.reshape(B, 1, -1)
     out = shd.shard(out, "batch", None, "tp")
     y = jnp.einsum("bsh,hd->bsd", out, p["wo"])

@@ -126,9 +126,21 @@ def loss_fn(cfg: ModelConfig, p, batch, tp: int):
     return _rwkv_loss(cfg, p, batch, tp)
 
 
-def serve_prefill(cfg: ModelConfig, p, batch, tp: int, cache):
+def serve_prefill(cfg: ModelConfig, p, batch, tp: int, cache,
+                  last_pos=None):
+    """``last_pos`` ((B,) int32) enables exact left-aligned padded prompt
+    batches — attention-only families: recurrent state (ssm/hybrid)
+    integrates right-padding, so those families must feed prompts
+    token-by-token instead (repro.serve.engine does)."""
     if cfg.family in TRANSFORMER_FAMILIES:
-        return transformer.serve_prefill(cfg, p, batch, tp, cache)
+        return transformer.serve_prefill(cfg, p, batch, tp, cache,
+                                         last_pos=last_pos)
+    if last_pos is not None:
+        raise ValueError(
+            f"per-slot prefill (last_pos) is only exact for attention "
+            f"families {TRANSFORMER_FAMILIES}; family {cfg.family!r} "
+            f"carries recurrent state that would integrate the padding — "
+            f"feed prompts through serve_step instead")
     if cfg.family == "hybrid":
         return zamba2.serve_prefill(cfg, p, batch, tp, cache)
     return _rwkv_prefill(cfg, p, batch, tp, cache)

@@ -80,6 +80,11 @@ class FLModel:
     #: (n_clients, cap) + batch_shape arrays of batch_dtype)
     batch_shape: Tuple[int, ...]
     batch_dtype: Any = np.float32
+    #: the bound :class:`~repro.configs.base.ModelConfig` for models that
+    #: ride the LM facade (``models/lm.py``) — what the serving plane
+    #: (``repro.serve``) rebuilds prefill/decode from.  ``None`` marks a
+    #: model with no decode path (cnn/logreg are not servable).
+    config: Any = None
 
 
 #: name -> factory(dims) -> FLModel; the extension point data.model
@@ -214,7 +219,8 @@ def _make_tiny_lm(dims: DataDims, arch: str = "tiny-lm",
         init_params=lambda key: lm.init_params(
             cfg, key, tp=1, dtype=jnp.float32),
         apply=apply, loss=loss, eval_metrics=eval_metrics,
-        batch_shape=(dims.seq_len,), batch_dtype=np.int32)
+        batch_shape=(dims.seq_len,), batch_dtype=np.int32,
+        config=cfg)
 
 
 def _make_tiny_lm_long(dims: DataDims) -> FLModel:

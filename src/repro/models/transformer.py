@@ -250,8 +250,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, tp: int,
     return attn.init_cache(cfg, batch, max_len, tp, dtype, stacked=cfg.n_layers)
 
 
-def serve_prefill(cfg, p, batch, tp: int, cache):
-    """Process the prompt; returns (last-position logits (B, V), cache)."""
+def serve_prefill(cfg, p, batch, tp: int, cache, last_pos=None):
+    """Process the prompt; returns (last-position logits (B, V), cache).
+
+    ``last_pos`` ((B,) int32, optional) serves *left-aligned* padded
+    prompt batches: the logits are gathered at each slot's own last real
+    token (position ``len - 1``) instead of the common final position,
+    and cache rows written past a slot's last real token are invalidated
+    (``positions = -1``) so decode never attends the right-padding.
+    Causality makes the left-aligned real tokens exact: position ``j``
+    only ever attends positions ``<= j``, which are all real.
+    """
     x, prefix_len = embed_inputs(cfg, p, batch, tp)
     S = x.shape[1]
     positions = jnp.arange(S, dtype=jnp.int32)
@@ -261,7 +270,18 @@ def serve_prefill(cfg, p, batch, tp: int, cache):
     x, ys = _scan_layers(cfg, body, x, p["layers"], cache)
     new_cache = ys[0]
     x = rms_norm(x, p["final_norm"], cfg.rms_eps)
-    return lm_head(cfg, p, x[:, -1]), new_cache
+    if last_pos is None:
+        return lm_head(cfg, p, x[:, -1]), new_cache
+    last_pos = jnp.asarray(last_pos, jnp.int32)
+    feats = x[jnp.arange(x.shape[0]), last_pos]              # (B, d)
+    # drop pad rows: a cache slot holding absolute position > last_pos is
+    # right-padding K/V — mark it empty so decode's validity mask (and a
+    # later ring overwrite) treats it exactly like a never-written slot
+    cpos = new_cache.positions                               # (L?, B, T)
+    keep = (cpos >= 0) & (cpos <= last_pos[..., :, None])
+    new_cache = new_cache._replace(
+        positions=jnp.where(keep, cpos, -1))
+    return lm_head(cfg, p, feats), new_cache
 
 
 def serve_step(cfg: ModelConfig, p, tokens: jax.Array, pos: jax.Array,

@@ -1,0 +1,34 @@
+"""Serving plane: spec-hash-addressed checkpoints -> continuous batching.
+
+The federated path produces params; this package serves them:
+
+  * :mod:`repro.serve.loader`  — resolve a checkpoint directory by spec
+    hash (the ``spec.json`` sidecar), rebuild the registered model from
+    the spec, restore the exact step the sidecar names.
+  * :mod:`repro.serve.engine`  — fixed-slot continuous-batching
+    prefill/decode engine (one trace per config; per-slot positions;
+    force-fed prompt handoff; cache-row reset on slot recycle).
+  * :mod:`repro.serve.loadgen` — open-loop Poisson load generation and
+    the p50/p95/p99 latency + throughput report.
+
+See DESIGN.md §Serving-plane.
+"""
+from repro.serve.engine import ServeEngine, ServeRequest  # noqa: F401
+from repro.serve.loader import (  # noqa: F401
+    LoadedCheckpoint,
+    load_checkpoint,
+)
+from repro.serve.loadgen import (  # noqa: F401
+    make_requests,
+    poisson_arrivals,
+    report,
+)
+from repro.serve.spec import ServeSpec  # noqa: F401
+
+
+def serve_from_checkpoint(checkpoint_dir, serve_spec, requests):
+    """Load a spec-hash-verified checkpoint and serve ``requests``
+    through a fresh engine; returns ``(loaded, done_requests)``."""
+    loaded = load_checkpoint(checkpoint_dir)
+    eng = ServeEngine(loaded.config, loaded.lm_params, serve_spec)
+    return loaded, eng.run(requests)

@@ -1,0 +1,277 @@
+"""Fixed-slot continuous-batching serve engine.
+
+The design contract (DESIGN.md §Serving-plane):
+
+  * **One trace per config.**  Exactly three jitted functions — prefill
+    ``(B, P)``, decode ``(B,)``, slot-reset ``(cache, mask)`` — all shaped
+    by :class:`ServeSpec`, never by the live request mix.  Admission,
+    retirement, and handoff are host-side bookkeeping over those fixed
+    shapes; ``trace_counts`` proves no silent retrace.
+  * **Per-slot positions.**  RoPE is translation-equivariant
+    mathematically but not bitwise, so a recycled slot restarts at
+    position 0 with its own entry in the ``(B,)`` position vector while
+    neighbours keep decoding (models/attention.py decode_attention).
+  * **Cache-reset invariant.**  Before a slot is reused, its cache rows
+    are reset to exactly the ``init_cache`` state (positions ``-1``,
+    K/V ``0``), so a recycled slot is bitwise indistinguishable from a
+    fresh one.
+  * **Exact handoff.**  A request admitted mid-flight force-feeds its
+    remaining prompt tokens through decode steps (logits discarded until
+    the last prompt token); nothing of the prompt is dropped.  Batched
+    prefill is only exact for attention-only families — recurrent state
+    (ssm/hybrid) integrates padding, so those families always force-feed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serve.spec import ServeSpec
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """One generation request plus its measured lifecycle."""
+    rid: int
+    prompt: np.ndarray            # (len,) int32 token ids
+    max_new: int
+    #: open-loop arrival offset (seconds from engine start); 0 = already
+    #: queued when the engine starts
+    arrival: float = 0.0
+    out: List[int] = dataclasses.field(default_factory=list)
+    #: True when the max_len position budget ended generation before
+    #: max_new tokens — distinguishable from a normally-finished request
+    truncated: bool = False
+    # lifecycle timestamps (seconds from engine start; -1 = never)
+    t_admit: float = -1.0
+    t_first: float = -1.0         # first *generated* token emitted
+    t_done: float = -1.0
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class ServeEngine:
+    """Continuous-batching decoder over a federated (or fresh) param tree.
+
+    ``cfg`` is the bound :class:`ModelConfig` (e.g. ``loaded.config``
+    from :mod:`repro.serve.loader`), ``params`` the LM-facade param tree.
+    """
+
+    def __init__(self, cfg, params, spec: ServeSpec, tp: int = 1):
+        spec.validate()
+        self.cfg = cfg
+        self.spec = spec
+        self.tp = tp
+        self.params = params
+        self.dtype = jnp.float32 if spec.dtype == "float32" else jnp.bfloat16
+        B, T = spec.slots, spec.max_len
+        self.is_transformer = cfg.family in lm.TRANSFORMER_FAMILIES
+        #: physical cache rows per slot (SWA archs ring over the window)
+        self.cache_rows = (min(T, cfg.swa_window) if cfg.swa_window else T)
+        self.cache = lm.init_cache(cfg, B, T, tp, self.dtype)
+        # host-side slot state
+        self.slot_req: List[Optional[ServeRequest]] = [None] * B
+        self.pending: List[Deque[int]] = [deque() for _ in range(B)]
+        self.pos = np.zeros(B, np.int32)          # tokens consumed per slot
+        self.next_tok = np.zeros(B, np.int32)     # last model output per slot
+        #: jit trace counters — the one-trace-per-config contract;
+        #: incremented by Python side effect at trace time only
+        self.trace_counts: Dict[str, int] = {"prefill": 0, "decode": 0,
+                                             "reset": 0}
+        V = cfg.vocab_size
+
+        def prefill_fn(p, toks, last_pos, c):
+            self.trace_counts["prefill"] += 1
+            logits, c = lm.serve_prefill(cfg, p, {"tokens": toks}, tp, c,
+                                         last_pos=last_pos)
+            nxt = jnp.argmax(logits[:, :V], axis=-1).astype(jnp.int32)
+            return nxt, c
+
+        def decode_fn(p, toks, pos, c):
+            self.trace_counts["decode"] += 1
+            logits, c = lm.serve_step(cfg, p, toks, pos, tp, c)
+            nxt = jnp.argmax(logits[:, :V], axis=-1).astype(jnp.int32)
+            return nxt, c
+
+        axes = lm.cache_axes_tree(cfg, tp)
+
+        def reset_fn(c, mask):
+            # mask: (B,) bool — True resets that slot's rows to the
+            # init_cache state (int leaves -> -1 i.e. "empty position",
+            # float leaves -> 0, matching init_cache / init_state)
+            self.trace_counts["reset"] += 1
+
+            def reset_leaf(leaf, ax):
+                i = ax.index("cache_batch")
+                shape = [1] * leaf.ndim
+                shape[i] = mask.shape[0]
+                m = mask.reshape(shape)
+                empty = (jnp.full_like(leaf, -1)
+                         if jnp.issubdtype(leaf.dtype, jnp.integer)
+                         else jnp.zeros_like(leaf))
+                return jnp.where(m, empty, leaf)
+
+            return jax.tree.map(reset_leaf, c, axes)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self._reset = jax.jit(reset_fn)
+
+    # ------------------------------------------------------------------
+    # slot bookkeeping (host side)
+    # ------------------------------------------------------------------
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self, queue: Deque[ServeRequest], now: float) -> List[int]:
+        """Move arrived requests into free slots; resets their cache rows.
+        Returns the admitted slot indices."""
+        admitted = []
+        mask = np.zeros(self.spec.slots, bool)
+        for i in self._free_slots():
+            if not queue or queue[0].arrival > now:
+                break
+            r = queue.popleft()
+            r.t_admit = now
+            self.slot_req[i] = r
+            self.pending[i] = deque(int(t) for t in np.asarray(r.prompt))
+            self.pos[i] = 0
+            self.next_tok[i] = 0
+            mask[i] = True
+            admitted.append(i)
+        if admitted:
+            self.cache = self._reset(self.cache, jnp.asarray(mask))
+        return admitted
+
+    def _retire(self, i: int, now: float, truncated: bool,
+                done: List[ServeRequest]) -> None:
+        r = self.slot_req[i]
+        r.truncated = truncated
+        r.t_done = now
+        done.append(r)
+        self.slot_req[i] = None
+        self.pending[i].clear()
+
+    # ------------------------------------------------------------------
+    # batched prefill (attention-only families, fresh batches)
+    # ------------------------------------------------------------------
+
+    def _can_prefill(self, slots: List[int]) -> bool:
+        """Batched prefill is used when *every* active slot was admitted
+        this instant (no slot holds live decode state the (B, P) prefill
+        trace would clobber) and every prompt fits the trace width."""
+        if not self.is_transformer:
+            return False
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if sorted(slots) != active:
+            return False
+        # a padded prefill wider than the physical cache would ring-evict
+        # the *real* rows of a short prompt in favour of its padding
+        if self.spec.prefill_len > self.cache_rows:
+            return False
+        return all(len(self.pending[i]) <= self.spec.prefill_len
+                   for i in slots)
+
+    def _prefill_wave(self, slots: List[int], now: float) -> None:
+        B, P = self.spec.slots, self.spec.prefill_len
+        toks = np.zeros((B, P), np.int32)
+        last_pos = np.zeros(B, np.int32)
+        for i in slots:
+            prompt = list(self.pending[i])
+            toks[i, :len(prompt)] = prompt        # left-aligned: exact
+            last_pos[i] = len(prompt) - 1
+            self.pending[i].clear()
+        nxt, self.cache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(last_pos),
+            self.cache)
+        nxt = np.asarray(nxt)
+        for i in slots:
+            r = self.slot_req[i]
+            self.pos[i] = len(r.prompt)
+            self.next_tok[i] = nxt[i]
+            r.out.append(int(nxt[i]))
+            r.t_first = now
+
+    # ------------------------------------------------------------------
+    # main loop
+    # ------------------------------------------------------------------
+
+    def run(self, requests: List[ServeRequest],
+            clock: Callable[[], float] = time.monotonic,
+            ) -> List[ServeRequest]:
+        """Serve ``requests`` (open loop: each becomes admissible at its
+        ``arrival`` offset) to completion; returns them in finish order
+        with lifecycle timestamps filled in."""
+        t0 = clock()
+        now = lambda: clock() - t0  # noqa: E731
+        queue: Deque[ServeRequest] = deque(
+            sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        done: List[ServeRequest] = []
+        B, T = self.spec.slots, self.spec.max_len
+
+        while queue or any(r is not None for r in self.slot_req):
+            t = now()
+            admitted = self._admit(queue, t)
+            if admitted and self._can_prefill(admitted):
+                self._prefill_wave(admitted, now())
+                # a prefilled request may already be done (max_new == 1)
+                # or have spent its whole position budget on the prompt
+                for i in admitted:
+                    r = self.slot_req[i]
+                    if r is None:
+                        continue
+                    if r.done:
+                        self._retire(i, now(), truncated=False, done=done)
+                    elif self.pos[i] >= T:
+                        self._retire(i, now(), truncated=True, done=done)
+                continue
+
+            active = [i for i in range(B) if self.slot_req[i] is not None]
+            if not active:
+                # open loop: idle until the next arrival
+                if queue:
+                    wait = queue[0].arrival - now()
+                    if wait > 0:
+                        time.sleep(min(wait, 0.05))
+                continue
+
+            # one decode step over all B slots (idle slots feed token 0
+            # at their stale position; their output is discarded and
+            # their rows are reset at the next admit)
+            toks = np.array(self.next_tok, np.int32, copy=True)
+            for i in active:
+                if self.pending[i]:
+                    toks[i] = self.pending[i].popleft()  # force-feed
+            nxt, self.cache = self._decode(
+                self.params, jnp.asarray(toks),
+                jnp.asarray(self.pos, jnp.int32), self.cache)
+            nxt = np.asarray(nxt)
+            t = now()
+            for i in active:
+                self.pos[i] += 1
+                self.next_tok[i] = nxt[i]
+                r = self.slot_req[i]
+                if self.pending[i]:
+                    # consumed a prompt token, more remain: no output yet
+                    if self.pos[i] >= T:
+                        self._retire(i, t, truncated=True, done=done)
+                    continue
+                r.out.append(int(nxt[i]))
+                if r.t_first < 0:
+                    r.t_first = t
+                if r.done:
+                    self._retire(i, t, truncated=False, done=done)
+                elif self.pos[i] >= T:
+                    # position budget exhausted before max_new tokens
+                    self._retire(i, t, truncated=True, done=done)
+        return done

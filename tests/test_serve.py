@@ -1,0 +1,230 @@
+"""Serving-plane invariants (repro.serve): prefill/decode bitwise parity
+with the training forward pass, continuous-batching conservation, slot
+recycling, and spec-hash-addressed checkpoint loading."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.build import save_checkpoint
+from repro.api.spec import ExperimentSpec, SpecError
+from repro.models import lm, transformer
+from repro.models import registry as model_registry
+from repro.serve import (LoadedCheckpoint, ServeEngine, ServeRequest,
+                         ServeSpec, load_checkpoint, make_requests,
+                         poisson_arrivals, report)
+
+
+def _tiny(backend="reference"):
+    """tiny_lm bound to the bitwise parity oracle (or another backend)."""
+    model = model_registry.build_model(
+        "tiny_lm", model_registry.DataDims(attention_backend=backend))
+    cfg = model.config
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), 1, jnp.float32)
+    return cfg, params
+
+
+def _burst(cfg, n, max_new, prompt_len=16, seed=0):
+    return make_requests(n, rate=0.0, prompt_len=prompt_len,
+                         max_new=max_new, vocab_size=cfg.vocab_size,
+                         seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# (a) prefill + decode logits == full training forward, bitwise
+# ---------------------------------------------------------------------------
+
+def test_prefill_decode_logits_bitwise_match_full_forward():
+    """The serve path (batched prefill then N greedy decode steps) must
+    produce logits byte-identical to the training forward pass over the
+    same final token sequence — the reference attention backend is the
+    shape-stable oracle that makes this exact on XLA:CPU."""
+    cfg, params = _tiny("reference")
+    Lp, N = 12, 6
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, Lp).astype(np.int32)
+
+    prefill = jax.jit(lambda p, t, lp, c: lm.serve_prefill(
+        cfg, p, {"tokens": t}, 1, c, last_pos=lp))
+    step = jax.jit(lambda p, t, po, c: lm.serve_step(cfg, p, t, po, 1, c))
+
+    cache = lm.init_cache(cfg, 1, Lp + N, 1, jnp.float32)
+    logits, cache = prefill(params, jnp.asarray(prompt[None]),
+                            jnp.asarray([Lp - 1], jnp.int32), cache)
+    served = [np.asarray(logits[0])]
+    seq = list(prompt)
+    for j in range(N - 1):
+        nxt = int(np.argmax(served[-1][:cfg.vocab_size]))
+        seq.append(nxt)
+        logits, cache = step(params, jnp.asarray([nxt], jnp.int32),
+                             jnp.asarray([Lp + j], jnp.int32), cache)
+        served.append(np.asarray(logits[0]))
+    seq.append(int(np.argmax(served[-1][:cfg.vocab_size])))
+
+    @jax.jit
+    def full(p, t):
+        feats, _, _ = transformer.forward_train(cfg, p, {"tokens": t}, 1)
+        return transformer.lm_head(cfg, p, feats)
+
+    ref = np.asarray(full(params, jnp.asarray(np.asarray(seq)[None],
+                                              jnp.int32))[0])
+    for j, got in enumerate(served):
+        want = ref[Lp - 1 + j]
+        assert got.tobytes() == want.tobytes(), (
+            f"decode step {j}: maxdiff "
+            f"{np.abs(got - want).max()}")
+
+
+# ---------------------------------------------------------------------------
+# (b) conservation, slot recycling, trace discipline
+# ---------------------------------------------------------------------------
+
+def test_engine_conservation_and_one_trace_per_config():
+    """7 requests through 3 slots: every request finishes with exactly
+    max_new tokens, nothing is truncated, and each jitted function traced
+    exactly once (fixed shapes — the one-trace-per-config contract)."""
+    cfg, params = _tiny("auto")
+    spec = ServeSpec(slots=3, max_len=48, prefill_len=16, max_new=6)
+    engine = ServeEngine(cfg, params, spec)
+    done = engine.run(_burst(cfg, 7, max_new=6))
+    assert len(done) == 7
+    assert sorted(r.rid for r in done) == list(range(7))
+    assert all(len(r.out) == 6 and not r.truncated for r in done)
+    assert all(r.t_admit <= r.t_first <= r.t_done for r in done)
+    assert engine.trace_counts == {"prefill": 1, "decode": 1, "reset": 1}
+
+
+def test_recycled_slot_bitwise_matches_fresh_slot():
+    """A recycled slot (cache rows reset, per-slot position restarted at
+    0, prompt force-fed through decode) must generate byte-for-byte what
+    a fresh slot generates for the same prompt — and neighbours must not
+    leak into it."""
+    cfg, params = _tiny("reference")
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 11).astype(np.int32)
+    other = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+
+    spec = ServeSpec(slots=2, max_len=48, prefill_len=16, max_new=6)
+    # rid 0+1 prefill as the first wave; rid 2 lands on a recycled slot
+    reqs = [ServeRequest(0, prompt.copy(), 4),
+            ServeRequest(1, other, 6),
+            ServeRequest(2, prompt.copy(), 4)]
+    done = {r.rid: r for r in ServeEngine(cfg, params, spec).run(reqs)}
+    assert done[0].out == done[2].out
+
+    # and both match the request served alone (no cross-slot leakage)
+    alone = ServeEngine(cfg, params, spec).run(
+        [ServeRequest(0, prompt.copy(), 4)])
+    assert alone[0].out == done[0].out
+
+
+def test_truncation_is_flagged():
+    """max_len ends generation early -> truncated=True, distinguishable
+    from a normally-finished request."""
+    cfg, params = _tiny("auto")
+    spec = ServeSpec(slots=1, max_len=12, prefill_len=8, max_new=64)
+    rng = np.random.default_rng(2)
+    req = ServeRequest(0, rng.integers(0, cfg.vocab_size, 8
+                                       ).astype(np.int32), 64)
+    done = ServeEngine(cfg, params, spec).run([req])
+    assert done[0].truncated
+    assert 0 < len(done[0].out) < 64
+
+
+def test_open_loop_arrivals_are_deterministic():
+    a = poisson_arrivals(16, rate=5.0, seed=3)
+    b = poisson_arrivals(16, rate=5.0, seed=3)
+    assert np.array_equal(a, b)
+    assert np.all(np.diff(a) >= 0)
+    assert np.array_equal(poisson_arrivals(8, rate=0.0, seed=3),
+                          np.zeros(8))
+    rep = report(ServeEngine(*_tiny("auto"), ServeSpec(
+        slots=2, max_len=32, prefill_len=8, max_new=4)).run(
+            make_requests(4, 50.0, 8, 4, 64, seed=0)))
+    assert rep["requests"] == 4 and rep["tokens"] == 16
+    assert rep["tok_per_s"] > 0
+    assert rep["latency_p50_s"] <= rep["latency_p99_s"]
+
+
+# ---------------------------------------------------------------------------
+# (c) spec-hash-addressed checkpoints
+# ---------------------------------------------------------------------------
+
+def _lm_spec():
+    return ExperimentSpec().with_overrides({
+        "data.model": "tiny_lm", "data.n_clients": 8,
+        "tiers.n_tiers": 2, "tiers.n_unstable": 0,
+        "tiers.clients_per_round": 2, "engine.total_updates": 1,
+    }).validate()
+
+
+def test_checkpoint_roundtrip_bitwise(tmp_path):
+    spec = _lm_spec()
+    d = spec.data
+    model = model_registry.build_model("tiny_lm", model_registry.DataDims(
+        n_classes=d.n_classes, image_hw=d.image_hw,
+        n_features=d.n_features, vocab_size=d.vocab_size,
+        seq_len=d.seq_len, attention_backend=d.attention_backend))
+    params = model.init_params(jax.random.PRNGKey(7))
+    save_checkpoint(str(tmp_path), spec, params, step=3)
+
+    loaded = load_checkpoint(str(tmp_path), expect_spec=spec)
+    assert isinstance(loaded, LoadedCheckpoint)
+    assert loaded.spec_hash == spec.hash()
+    assert loaded.step == 3
+    assert loaded.config is not None
+    flat_a = jax.tree.leaves(params)
+    flat_b = jax.tree.leaves(loaded.params)
+    assert len(flat_a) == len(flat_b)
+    for a, b in zip(flat_a, flat_b):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_checkpoint_wrong_spec_hash_refused(tmp_path):
+    spec = _lm_spec()
+    model = model_registry.build_model("tiny_lm",
+                                       model_registry.DataDims())
+    save_checkpoint(str(tmp_path), spec,
+                    model.init_params(jax.random.PRNGKey(0)), step=1)
+    other = spec.with_overrides({"engine.lr": 0.123}).validate()
+    with pytest.raises(SpecError, match="was written by spec"):
+        load_checkpoint(str(tmp_path), expect_spec=other)
+    # a hand-edited sidecar (hash no longer matches its own spec doc)
+    side = os.path.join(str(tmp_path), "spec.json")
+    with open(side) as f:
+        doc = json.load(f)
+    doc["spec_hash"] = "0" * 12
+    with open(side, "w") as f:
+        json.dump(doc, f)
+    with pytest.raises(SpecError, match="self-inconsistent"):
+        load_checkpoint(str(tmp_path))
+
+
+def test_checkpoint_missing_or_nonservable(tmp_path):
+    with pytest.raises(SpecError, match="no spec.json"):
+        load_checkpoint(str(tmp_path / "nope"))
+    # cnn has no decode path (FLModel.config is None)
+    spec = ExperimentSpec().with_overrides({
+        "data.model": "cnn", "data.n_clients": 8, "tiers.n_tiers": 2,
+        "tiers.n_unstable": 0, "tiers.clients_per_round": 2,
+    }).validate()
+    model = model_registry.build_model("cnn", model_registry.DataDims())
+    save_checkpoint(str(tmp_path), spec,
+                    model.init_params(jax.random.PRNGKey(0)), step=1)
+    with pytest.raises(SpecError, match="no decode path"):
+        load_checkpoint(str(tmp_path))
+
+
+def test_serve_spec_validation():
+    with pytest.raises(SpecError):
+        ServeSpec(slots=0).validate()
+    with pytest.raises(SpecError):
+        ServeSpec(prefill_len=99, max_len=64).validate()
+    with pytest.raises(SpecError):
+        ServeSpec(dtype="float16").validate()
+    rt = ServeSpec.from_dict(ServeSpec(slots=7).to_dict())
+    assert rt == ServeSpec(slots=7)
