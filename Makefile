@@ -3,9 +3,9 @@ PY ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
-.PHONY: test test-kernels test-faultplane test-serve bench-smoke \
-	bench-engine bench-roofline bench-serve smoke-example smoke-lm \
-	smoke-fault smoke-serve docs check-docs
+.PHONY: test test-kernels test-faultplane test-serve test-population \
+	bench-smoke bench-engine bench-roofline bench-serve smoke-example \
+	smoke-lm smoke-fault smoke-serve smoke-population docs check-docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -27,6 +27,13 @@ test-faultplane:
 # slot recycling, and spec-hash-addressed checkpoint loading
 test-serve:
 	$(PY) -m pytest -q tests/test_serve.py
+
+# the population plane as a required job of its own: stacked-vs-streaming
+# bitwise parity, the FLGo-style availability/responsiveness/completion
+# process grammars, flat-memory scaling, and the cross-plane composition
+# suites live in tests/test_population.py
+test-population:
+	$(PY) -m pytest -q tests/test_population.py
 
 # regenerate the introspected ExperimentSpec reference (docs/SPEC.md)
 docs:
@@ -82,6 +89,20 @@ smoke-serve:
 	$(PY) -m repro.api.cli serve --resume-from /tmp/smoke_serve_ckpt \
 	    --requests 6 --slots 3 --prompt-len 12 --max-new 6 --rate 25
 
+# 2 federated rounds over a 100k-client population through the CLI:
+# streaming plane, stochastic availability, flat device memory — proves
+# the population spec section end-to-end on every push (CI runs this)
+smoke-population:
+	$(PY) -m repro.api.cli \
+	    --set data.n_clients=100000 --set data.samples_per_client=12 \
+	    --set data.image_hw=8 --set tiers.n_tiers=5 \
+	    --set tiers.clients_per_round=8 --set tiers.n_unstable=1000 \
+	    --set engine.local_epochs=1 --set engine.total_updates=2 \
+	    --set engine.eval_every=2 \
+	    --set population.plane=streaming \
+	    --set population.availability=bernoulli:0.9:20 \
+	    --set population.eval_clients=32
+
 bench-smoke:
 	$(PY) -m benchmarks.run codec codec_e2e kernels
 
@@ -97,11 +118,13 @@ bench-roofline:
 # (512-client scenario single-device and client-sharded on a forced
 # multi-device host mesh, subprocess) + the federated-LM path
 # (tiny_lm with/without the polyline codec) + the fault-plane
-# degradation curve (0/5%/20% fault pressure) + machine-readable JSON
-# for cross-PR perf tracking
+# degradation curve (0/5%/20% fault pressure) + the population plane
+# (streaming rounds at 1k/100k/1M clients, flat-memory pin) +
+# machine-readable JSON for cross-PR perf tracking
 bench-engine:
 	$(PY) -m benchmarks.run engine engine_scaled engine_lm \
-	    engine_faults engine_sharded --json BENCH_engine.json
+	    engine_faults engine_sharded engine_population \
+	    $(if $(SMOKE),--smoke) --json BENCH_engine.json
 
 # serving-plane latency under open-loop Poisson load, from spec-hash-
 # verified federated checkpoints (train -> checkpoint -> load -> serve):

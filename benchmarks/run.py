@@ -26,6 +26,12 @@ actually separate.
 events/sec and accuracy per level, with the zero-fault row cross-checked
 bitwise against a second run.
 
+``engine_population`` measures the population plane's scale axis
+(streaming/gather data path at 1k -> 100k -> 1M simulated clients;
+100k under ``--smoke``): events/sec, peak data-plane bytes, and the
+flat-memory ratio vs the 1k row, with a 256-client stacked-vs-streaming
+parity row cross-checked bitwise.
+
 ``roofline`` runs the measured kernel roofline
 (benchmarks/roofline.kernel_roofline): per-kernel achieved FLOP/s and
 % of the machine roof, into ``JSON_DOC["roofline"]``.  ``--smoke``
@@ -448,6 +454,91 @@ def engine_faults():
         JSON_DOC["results"].append(rec)
 
 
+def _population_spec(n, plane="streaming", total=10):
+    """The population-plane scenario: the scaled workload shape
+    (clients_per_round=32, 5 tiers) over the indexed population with
+    FLGo-style availability/responsiveness processes, at any N."""
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_clients=n, classes_per_client=2,
+                          samples_per_client=24, image_hw=8, seed=8),
+        tiers=api.TierSpec(n_tiers=5, clients_per_round=32,
+                           n_unstable=max(n // 16, 1)),
+        strategy=api.StrategySpec(name="fedat"),
+        engine=api.EngineSpec(total_updates=total, eval_every=total,
+                              local_epochs=1),
+        population=api.PopulationSpec(
+            plane=plane, availability="bernoulli:0.9:20",
+            responsiveness="lognormal:0.25", eval_clients=64, seed=1))
+
+
+def engine_population():
+    """Population-plane scale axis (DESIGN.md §Population-plane):
+
+    * a parity pin at N=256 — the streaming plane re-run against the
+      stacked plane and cross-checked bitwise (trajectory + bytes),
+      recorded like ``engine_faults``' zero-fault pin;
+    * streaming rows at 1k -> 100k -> 1M clients (100k in ``--smoke``),
+      each recording events/sec, the peak data-plane bytes, and the
+      flat-memory ratio vs the 1k row (the acceptance bound: within 10%).
+
+    Environments are evicted between rows so a 1M-client population's
+    host state doesn't sit under the next row's measurement."""
+    # -- parity pin ----------------------------------------------------
+    api.clear_env_cache()
+    m_stack = api.run_spec(_population_spec(256, plane="stacked")).metrics
+    api.clear_env_cache()
+    spec = _population_spec(256)
+    m_stream = api.run_spec(spec).metrics
+    bitwise = (m_stack.times == m_stream.times
+               and m_stack.acc == m_stream.acc
+               and m_stack.bytes_up == m_stream.bytes_up
+               and m_stack.bytes_down == m_stream.bytes_down)
+    api.clear_env_cache()
+    emit("engine/population_parity_256", 0.0,
+         f"stream_bitwise_eq_stacked={bitwise}")
+    JSON_DOC["results"].append({
+        "strategy": "fedat", "scenario": "population_parity_256",
+        "n_clients": 256, "stream_bitwise_eq_stacked": bitwise,
+        "spec_hash": spec.hash(),
+    })
+
+    # -- scale rows ----------------------------------------------------
+    sizes = (1_000, 100_000) if SMOKE[0] else (1_000, 100_000, 1_000_000)
+    bytes_1k = None
+    for n in sizes:
+        spec = _population_spec(n)
+        total = spec.engine.total_updates
+        warm = spec.with_overrides({"engine.total_updates": 3})
+        api.build(warm).run()        # warm: compile the fused step once
+        run = api.build(spec)
+        t0 = time.perf_counter()
+        m = run.run().metrics
+        dt = time.perf_counter() - t0
+        env = run.env
+        peak = env.data_plane_bytes()
+        if bytes_1k is None:
+            bytes_1k = peak
+        ratio = peak / bytes_1k
+        tag = f"population_{n}"
+        emit(f"engine/{tag}", dt / total * 1e6,
+             f"events_per_sec={total / dt:.2f};"
+             f"data_plane_mb={peak / 1e6:.2f};flat_vs_1k={ratio:.3f}")
+        JSON_DOC["results"].append({
+            "strategy": "fedat", "scenario": tag, "n_clients": n,
+            "clients_per_round": spec.tiers.clients_per_round,
+            "plane": "streaming", "total_updates": total,
+            "events_per_sec": round(total / dt, 3),
+            "us_per_event": round(dt / total * 1e6, 1),
+            "best_acc": round(m.best_acc, 4),
+            "data_plane_bytes": int(peak),
+            "flat_vs_1k": round(ratio, 4),
+            "trace_counts": {"/".join(map(str, k)): v
+                             for k, v in env.executor().trace_counts.items()},
+            "spec_hash": spec.hash(),
+        })
+        api.clear_env_cache()   # free the (N,)-sized host state arrays
+
+
 def engine_sharded():
     """The scaled scenario under a multi-device host mesh, measured in a
     subprocess with ``--xla_force_host_platform_device_count`` (the only
@@ -575,6 +666,7 @@ ALL = {
     "engine_scaled": engine_scaled,
     "engine_lm": engine_lm,
     "engine_faults": engine_faults,
+    "engine_population": engine_population,
     "engine_sharded": engine_sharded,
     "roofline": roofline,
     "kernels": kernels,
@@ -583,7 +675,7 @@ ALL = {
 
 #: targets whose structured results --json records
 _JSON_TARGETS = ("engine", "engine_scaled", "engine_lm", "engine_faults",
-                 "engine_sharded", "roofline")
+                 "engine_population", "engine_sharded", "roofline")
 
 
 def _write_json(path: str) -> None:

@@ -19,5 +19,6 @@ CLI: ``python -m repro.api.cli --spec exp.json --set strategy.name=fedat
 from repro.api.build import (Result, Run, build, clear_env_cache,  # noqa: F401
                              get_env, run_spec, save_checkpoint, sweep)
 from repro.api.spec import (SPEC_VERSION, DataSpec, EngineSpec,  # noqa: F401
-                            ExperimentSpec, FaultSpec, MeshSpec, SpecError,
-                            StrategySpec, TierSpec, TransportSpec)
+                            ExperimentSpec, FaultSpec, MeshSpec,
+                            PopulationSpec, SpecError, StrategySpec,
+                            TierSpec, TransportSpec)

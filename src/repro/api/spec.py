@@ -12,6 +12,9 @@ server policy — from five nested sections:
   * :class:`MeshSpec`      device mesh for the client-sharded round step
   * :class:`FaultSpec`     deterministic fault plane (churn, blackouts,
     poisoned uplinks, crash-resume cadence)
+  * :class:`PopulationSpec` million-client population plane (streaming
+    data path, FLGo-style availability/responsiveness/completion
+    processes)
 
 The spec is plain data: ``to_dict``/``from_dict`` round-trip through JSON
 (``from_dict`` rejects unknown fields with the valid-field list), and
@@ -35,8 +38,16 @@ import json
 from typing import Any, Dict, Optional, Tuple
 
 from repro.compress import transport
+from repro.core import population as population_mod
 from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 
+#: Version 6 added the ``population`` section (million-client population
+#: plane, DESIGN.md §Population-plane): an indexed client generator with
+#: a streaming/gather data path where only the K sampled clients per
+#: round materialize batches, plus FLGo-style stochastic availability /
+#: responsiveness / completion processes drawn from dedicated population
+#: rng streams.  The all-defaults section is *exactly* the legacy
+#: stacked plane — bitwise-identical trajectories.
 #: Version 5 added the ``faults`` section (deterministic fault plane:
 #: transient client churn, tier blackouts, uplink poisoning + the
 #: server-side validation gate, crash-resume checkpoint cadence — all
@@ -51,13 +62,14 @@ from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 #: (client-sharded round executor).  Version-1/2/3/4 documents still
 #: parse — a ``task`` key migrates through the deprecation shim
 #: (``image`` -> ``cnn``, ``text`` -> ``logreg``), missing
-#: ``mesh``/``attention_backend``/``faults`` get their defaults (a
-#: defaulted ``faults`` section is exactly the zero-fault engine) — but
-#: serialization always emits the current version, so hashes of
-#: re-serialized old specs change (deliberately: the fault scenario is
-#: now part of what a result is attributable to).
-SPEC_VERSION = 5
-_READABLE_VERSIONS = (1, 2, 3, 4, 5)
+#: ``mesh``/``attention_backend``/``faults``/``population`` get their
+#: defaults (a defaulted ``faults`` section is exactly the zero-fault
+#: engine; a defaulted ``population`` section is exactly the legacy
+#: stacked plane) — but serialization always emits the current version,
+#: so hashes of re-serialized old specs change (deliberately: the
+#: population scenario is now part of what a result is attributable to).
+SPEC_VERSION = 6
+_READABLE_VERSIONS = (1, 2, 3, 4, 5, 6)
 
 def _resolve_legacy_task(task: Any, existing_model: Optional[str]) -> str:
     """The ``data.task`` deprecation shim shared by ``from_dict`` and
@@ -418,13 +430,95 @@ class FaultSpec:
                  f"got {self.checkpoint_every}")
 
 
+@dataclasses.dataclass
+class PopulationSpec:
+    """Million-client population plane (DESIGN.md §Population-plane).
+
+    ``plane`` selects the data path: ``"legacy"`` (the default) keeps the
+    seed generator and device-resident stacked train data — with every
+    other field at its default this section maps to *no* population
+    config at all, so golden trajectories are untouched.  ``"stacked"``
+    switches to the indexed population generator (vectorized size/class
+    draws, per-client content streams) with the full train stack still
+    device-resident; ``"streaming"`` keeps the same generator but
+    materializes only the K sampled clients' rows per round, so device
+    memory stays flat in N (the 100k–1M regime).
+
+    The stochastic client-state processes follow FLGo's taxonomy and are
+    drawn from dedicated population rng streams seeded by ``seed``:
+
+    * ``availability`` — ``"always"`` or ``"bernoulli:<p>[:<period>]"``:
+      per time-slot of length ``period`` (default 20 sim-seconds), each
+      client is available with probability p (fresh iid draw per slot).
+    * ``responsiveness`` — ``"none"``, ``"lognormal:<sigma>"`` or
+      ``"uniform:<lo>,<hi>"``: a per-client latency multiplier applied
+      to the profiled latencies *before* tier assignment.
+    * ``completion`` — same grammar as availability: per-slot probability
+      that a sampled client actually completes its round (incomplete
+      clients are dropped before Eq. 4, which renormalizes over the
+      survivors without retracing).
+
+    ``eval_clients`` caps the server-side eval set to a fixed random
+    subset (0 = every client), which keeps the test stack O(1) in N.
+    """
+    #: "legacy" | "stacked" | "streaming" (see class docstring)
+    plane: str = "legacy"
+    availability: str = "always"
+    responsiveness: str = "none"
+    completion: str = "none"
+    #: eval on a fixed random subset of this many clients (0 = all)
+    eval_clients: int = 0
+    #: the dedicated population rng stream seed
+    seed: int = 0
+
+    def validate(self, n_clients: int) -> None:
+        _require(self.plane in population_mod.PLANES,
+                 f"population.plane must be one of "
+                 f"{population_mod.PLANES}, got {self.plane!r}")
+        for field_name, value, off in (
+                ("availability", self.availability, "always"),
+                ("completion", self.completion, "none")):
+            try:
+                population_mod.parse_process(value, field_name, off)
+            except ValueError as e:
+                raise SpecError(f"population.{field_name}: {e}")
+        try:
+            population_mod.parse_responsiveness(self.responsiveness)
+        except ValueError as e:
+            raise SpecError(f"population.responsiveness: {e}")
+        _require(0 <= self.eval_clients <= n_clients,
+                 f"population.eval_clients must be in "
+                 f"[0, n_clients={n_clients}], got {self.eval_clients}")
+
+    def to_config(self) -> Optional[population_mod.PopulationConfig]:
+        """The :class:`SimConfig` payload; ``None`` when every knob is at
+        its default (modulo seed), which is *exactly* the legacy plane."""
+        cfg = population_mod.PopulationConfig(
+            plane=self.plane, availability=self.availability,
+            responsiveness=self.responsiveness, completion=self.completion,
+            eval_clients=self.eval_clients, seed=self.seed)
+        return cfg if cfg.active else None
+
+    @classmethod
+    def from_config(
+            cls, pc: Optional[population_mod.PopulationConfig]
+    ) -> "PopulationSpec":
+        if pc is None:
+            return cls()
+        return cls(plane=pc.plane, availability=pc.availability,
+                   responsiveness=pc.responsiveness,
+                   completion=pc.completion,
+                   eval_clients=pc.eval_clients, seed=pc.seed)
+
+
 # ---------------------------------------------------------------------------
 # the composed spec
 # ---------------------------------------------------------------------------
 
 _SECTIONS = {"data": DataSpec, "tiers": TierSpec, "strategy": StrategySpec,
              "transport": TransportSpec, "engine": EngineSpec,
-             "mesh": MeshSpec, "faults": FaultSpec}
+             "mesh": MeshSpec, "faults": FaultSpec,
+             "population": PopulationSpec}
 
 
 @dataclasses.dataclass
@@ -437,6 +531,8 @@ class ExperimentSpec:
     engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
     mesh: MeshSpec = dataclasses.field(default_factory=MeshSpec)
     faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    population: PopulationSpec = dataclasses.field(
+        default_factory=PopulationSpec)
 
     # -- validation -----------------------------------------------------
     def validate(self) -> "ExperimentSpec":
@@ -447,6 +543,7 @@ class ExperimentSpec:
         self.engine.validate()
         self.mesh.validate(self.tiers.clients_per_round)
         self.faults.validate()
+        self.population.validate(self.data.n_clients)
         return self
 
     # -- serialization --------------------------------------------------
@@ -532,7 +629,8 @@ class ExperimentSpec:
                                    "churn_downtime", "churn_window",
                                    "seed")}
         return {"data": d["data"], "tiers": tiers, "local": local,
-                "mesh": d["mesh"], "churn": churn}
+                "mesh": d["mesh"], "churn": churn,
+                "population": d["population"]}
 
     def env_hash(self) -> str:
         return hashlib.sha256(json.dumps(
@@ -602,7 +700,8 @@ class ExperimentSpec:
             churn_events=self.faults.churn_events,
             churn_downtime=self.faults.churn_downtime,
             churn_window=self.faults.churn_window,
-            fault_seed=self.faults.seed)
+            fault_seed=self.faults.seed,
+            population=self.population.to_config())
 
     @classmethod
     def from_sim_config(cls, sc: SimConfig) -> "ExperimentSpec":
@@ -630,4 +729,5 @@ class ExperimentSpec:
             faults=FaultSpec(
                 churn_rate=sc.churn_rate, churn_events=sc.churn_events,
                 churn_downtime=sc.churn_downtime,
-                churn_window=sc.churn_window, seed=sc.fault_seed))
+                churn_window=sc.churn_window, seed=sc.fault_seed),
+            population=PopulationSpec.from_config(sc.population))

@@ -8,7 +8,13 @@ Eq. 4 / Eq. 3 aggregation as a swarm of tiny un-jitted dispatches.  The
 
 * **Resident data plane** — ``SimEnv`` uploads the padded train stacks to
   the device once; per-event client selection is an in-graph ``jnp.take``
-  over a fixed-length id vector.
+  over a fixed-length id vector.  Under the **streaming population
+  plane** (DESIGN.md §Population-plane) there is no resident stack: the
+  K sampled clients' padded batch is host-materialized per round and
+  passed to the same step body as data — a jit argument is
+  bitwise-identical input to the in-graph gather of the same rows, so
+  the two planes share one step body at a distinct ``("stream",)``
+  trace key.
 * **Fixed-shape padding contract** — a dropout-shrunken sample of ``n``
   live clients is padded to ``clients_per_round`` slots by repeating a
   live id with a **zero aggregation weight**.  Adding exactly-zero terms
@@ -128,6 +134,16 @@ class RoundExecutor:
         self.shard_tiers = bool(getattr(env.sc, "shard_tiers", False)) \
             and self.mesh is not None \
             and self.mesh.shape.get("pod", 1) > 1
+        #: streaming population plane (DESIGN.md §Population-plane): no
+        #: resident train stacks — the K sampled clients' rows are
+        #: host-materialized per round and passed to the fused step as
+        #: data.  Streaming steps get a distinct ("stream",) trace-key
+        #: tag; the step bodies themselves are shared (``_select``).
+        self.streaming = bool(getattr(env, "streaming", False))
+        self._tag: Tuple[str, ...] = ("stream",) if self.streaming else ()
+        #: high-water mark of the streamed per-round batch bytes (0 until
+        #: a streaming round runs; SimEnv.data_plane_bytes reads it)
+        self.stream_bytes = 0
         self._steps: Dict[tuple, Any] = {}
         #: step key -> number of times the step body was traced; a fixed-
         #: shape step traces exactly once per configuration.
@@ -148,7 +164,7 @@ class RoundExecutor:
         pid[:n] = ids
         pid[n:] = ids[0] if n else 0
         ns = np.zeros(self.K, np.float32)
-        ns[:n] = self.env.train["n_samples"][ids]
+        ns[:n] = self.env.n_train_all[ids]
         return pid, ns
 
     def _pad_keys(self, seed: int, n: int) -> jax.Array:
@@ -160,11 +176,32 @@ class RoundExecutor:
         pad = jnp.zeros((self.K - n,) + keys.shape[1:], keys.dtype)
         return jnp.concatenate([keys, pad], axis=0)
 
-    def _gather(self, ids):
-        """In-graph client selection over the resident train stacks."""
-        data = self.env.train_dev
-        return {k: jnp.take(data[k], ids, axis=0)
+    def _select(self, data):
+        """Client rows for the round: an in-graph gather over the resident
+        train stacks when ``data`` is the padded id vector, or the
+        streamed batch itself when ``data`` is the materialized dict
+        (streaming population plane).  A batch passed as a jit argument
+        is bitwise-identical input to the in-graph gather of the same
+        rows, so the two planes share one step body
+        (tests/test_population.py pins the parity)."""
+        if isinstance(data, dict):
+            return data
+        stacks = self.env.train_dev
+        return {k: jnp.take(stacks[k], data, axis=0)
                 for k in ("x", "y", "mask")}
+
+    def _round_data(self, pid: np.ndarray):
+        """What the fused step selects from: the padded id vector
+        (resident planes) or the host-materialized padded batch
+        (streaming plane).  Padded dead slots repeat a live id, so the
+        streamed batch repeats that client's rows — the same selection
+        the resident gather produces, behind a zero Eq. 4 weight."""
+        if not self.streaming:
+            return pid
+        batch = self.env.population.materialize(pid)
+        self.stream_bytes = max(self.stream_bytes,
+                                sum(a.nbytes for a in batch.values()))
+        return {k: jnp.asarray(v) for k, v in batch.items()}
 
     # ------------------------------------------------------------------
     # fused steps (one compile per configuration, cached)
@@ -228,7 +265,7 @@ class RoundExecutor:
 
     def _fedat_step_sharded(self, codec, use_prox: bool):
         self._check_in_graph(codec)
-        key = ("fedat", codec.name, use_prox, f"data{self.D}")
+        key = ("fedat", codec.name, use_prox, f"data{self.D}") + self._tag
         if key in self._steps:
             return self._steps[key]
         env = self.env
@@ -236,11 +273,11 @@ class RoundExecutor:
         train = self._train_psum(update, codec.lossy)
         lossy = codec.lossy
 
-        def step(w_global, tier_models, m, ids, w_intra, w_cross, keys):
+        def step(w_global, tier_models, m, data, w_intra, w_cross, keys):
             self._bump(key)
             w_sent = _pin(lossy(w_global))
             tier_model = _pin(
-                train(w_sent, self._gather(ids), keys, w_intra))
+                train(w_sent, self._select(data), keys, w_intra))
             tier_models = self._tier_place(jax.tree.map(
                 lambda s, nw: s.at[m].set(nw), tier_models, tier_model))
             w_global = aggregation.weighted_average(tier_models, w_cross)
@@ -252,17 +289,17 @@ class RoundExecutor:
     def _fedavg_step_sharded(self, codec=None):
         self._check_in_graph(codec)
         key = (("fedavg",) if codec is None else ("fedavg", codec.name)) \
-            + (f"data{self.D}",)
+            + (f"data{self.D}",) + self._tag
         if key in self._steps:
             return self._steps[key]
         update = self.env.update_fn_noprox_raw
         train = self._train_psum(update, None if codec is None
                                  else codec.lossy)
 
-        def step(w, ids, w_intra, keys):
+        def step(w, data, w_intra, keys):
             self._bump(key)
             w_in = w if codec is None else _pin(codec.lossy(w))
-            return train(w_in, self._gather(ids), keys, w_intra)
+            return train(w_in, self._select(data), keys, w_intra)
 
         self._steps[key] = jax.jit(step, donate_argnums=_donate((0,)))
         return self._steps[key]
@@ -272,17 +309,17 @@ class RoundExecutor:
         if self.D > 1:
             return self._fedat_step_sharded(codec, use_prox)
         self._check_in_graph(codec)
-        key = ("fedat", codec.name, use_prox)
+        key = ("fedat", codec.name, use_prox) + self._tag
         if key in self._steps:
             return self._steps[key]
         env = self.env
         update = env.update_fn_raw if use_prox else env.update_fn_noprox_raw
         lossy = codec.lossy
 
-        def step(w_global, tier_models, m, ids, w_intra, w_cross, keys):
+        def step(w_global, tier_models, m, data, w_intra, w_cross, keys):
             self._bump(key)
             w_sent = _pin(lossy(w_global))
-            client_params, _ = update(w_sent, self._gather(ids), keys)
+            client_params, _ = update(w_sent, self._select(data), keys)
             client_params = _pin(lossy(_pin(client_params)))
             tier_model = _pin(
                 aggregation.weighted_average(client_params, w_intra))
@@ -308,7 +345,8 @@ class RoundExecutor:
                 f"(mesh data axis D={self.D}); run gated fault scenarios "
                 "without a mesh data axis")
         self._check_in_graph(codec)
-        key = ("fedat", codec.name, use_prox, "gate", gate.clip_norm)
+        key = ("fedat", codec.name, use_prox, "gate", gate.clip_norm) \
+            + self._tag
         if key in self._steps:
             return self._steps[key]
         from repro.core import steps as fl_steps
@@ -317,11 +355,11 @@ class RoundExecutor:
         lossy = codec.lossy
         clip = float(gate.clip_norm)
 
-        def step(w_global, tier_models, m, ids, w_intra, w_cross, keys,
+        def step(w_global, tier_models, m, data, w_intra, w_cross, keys,
                  poison):
             self._bump(key)
             w_sent = _pin(lossy(w_global))
-            client_params, _ = update(w_sent, self._gather(ids), keys)
+            client_params, _ = update(w_sent, self._select(data), keys)
             client_params = _pin(lossy(_pin(client_params)))
             client_params = fl_steps.poison_updates(client_params, poison)
             client_params, w_ok, any_ok = fl_steps.gate_updates(
@@ -346,15 +384,16 @@ class RoundExecutor:
         if self.D > 1:
             return self._fedavg_step_sharded(codec)
         self._check_in_graph(codec)
-        key = ("fedavg",) if codec is None else ("fedavg", codec.name)
+        key = (("fedavg",) if codec is None
+               else ("fedavg", codec.name)) + self._tag
         if key in self._steps:
             return self._steps[key]
         update = self.env.update_fn_noprox_raw
 
-        def step(w, ids, w_intra, keys):
+        def step(w, data, w_intra, keys):
             self._bump(key)
             w_in = w if codec is None else _pin(codec.lossy(w))
-            client_params, _ = update(w_in, self._gather(ids), keys)
+            client_params, _ = update(w_in, self._select(data), keys)
             if codec is not None:
                 client_params = _pin(codec.lossy(_pin(client_params)))
             return aggregation.weighted_average(_pin(client_params), w_intra)
@@ -372,17 +411,17 @@ class RoundExecutor:
                 "without a mesh data axis")
         self._check_in_graph(codec)
         key = (("fedavg",) if codec is None else ("fedavg", codec.name)) \
-            + ("gate", gate.clip_norm)
+            + ("gate", gate.clip_norm) + self._tag
         if key in self._steps:
             return self._steps[key]
         from repro.core import steps as fl_steps
         update = self.env.update_fn_noprox_raw
         clip = float(gate.clip_norm)
 
-        def step(w, ids, w_intra, keys, poison):
+        def step(w, data, w_intra, keys, poison):
             self._bump(key)
             w_in = w if codec is None else _pin(codec.lossy(w))
-            client_params, _ = update(w_in, self._gather(ids), keys)
+            client_params, _ = update(w_in, self._select(data), keys)
             if codec is not None:
                 client_params = _pin(codec.lossy(_pin(client_params)))
             client_params = _pin(client_params)
@@ -401,15 +440,16 @@ class RoundExecutor:
         fan-out to shard: this step is identical under any mesh (the model
         math itself still lands in the auto-sharded GSPMD region)."""
         self._check_in_graph(codec)
-        key = ("fedasync",) if codec is None else ("fedasync", codec.name)
+        key = (("fedasync",) if codec is None
+               else ("fedasync", codec.name)) + self._tag
         if key in self._steps:
             return self._steps[key]
         update = self.env.update_fn_noprox_raw
 
-        def step(w, cid, c_glob, c_loc, keys):
+        def step(w, data, c_glob, c_loc, keys):
             self._bump(key)
             w_in = w if codec is None else _pin(codec.lossy(w))
-            client_params, _ = update(w_in, self._gather(cid), keys)
+            client_params, _ = update(w_in, self._select(data), keys)
             client_w = _pin(jax.tree.map(lambda a: a[0], client_params))
             if codec is not None:
                 client_w = _pin(codec.lossy(client_w))
@@ -453,16 +493,17 @@ class RoundExecutor:
         no poisoning this round).
         """
         pid, ns = self._pad_ids(ids)
+        data = self._round_data(pid)
         keys = self._pad_keys(seed, len(ids))
         if gate is None:
             step = self._fedat_step(codec, use_prox)
-            return step(w_global, tier_models, np.int32(m), pid,
+            return step(w_global, tier_models, np.int32(m), data,
                         aggregation.client_weights_host(ns), cross_weights,
                         keys)
         step = self._fedat_step_gated(codec, use_prox, gate)
         if poison is None:
             poison = np.zeros(self.K, bool)
-        return step(w_global, tier_models, np.int32(m), pid,
+        return step(w_global, tier_models, np.int32(m), data,
                     aggregation.client_weights_host(ns), cross_weights,
                     keys, poison)
 
@@ -475,14 +516,15 @@ class RoundExecutor:
         through here too).  ``gate``/``poison`` select the fault plane's
         gated step, as in :meth:`fedat_round`."""
         pid, ns = self._pad_ids(ids)
+        data = self._round_data(pid)
         keys = self._pad_keys(seed, len(ids))
         if gate is None:
             step = self._fedavg_step(codec)
-            return step(w, pid, aggregation.client_weights_host(ns), keys)
+            return step(w, data, aggregation.client_weights_host(ns), keys)
         step = self._fedavg_step_gated(codec, gate)
         if poison is None:
             poison = np.zeros(self.K, bool)
-        return step(w, pid, aggregation.client_weights_host(ns), keys,
+        return step(w, data, aggregation.client_weights_host(ns), keys,
                     poison)
 
     def fedasync_round(self, w, client: int, a_eff: float, seed: int, *,
@@ -494,5 +536,6 @@ class RoundExecutor:
         """
         step = self._fedasync_step(codec)
         keys = jax.random.split(jax.random.PRNGKey(seed), 1)
-        cid = np.asarray([client], np.int32)
-        return step(w, cid, np.float32(1.0 - a_eff), np.float32(a_eff), keys)
+        data = self._round_data(np.asarray([client], np.int32))
+        return step(w, data, np.float32(1.0 - a_eff), np.float32(a_eff),
+                    keys)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import faults as faults_mod
+from repro.core import population as population_mod
 from repro.core import tiering
 from repro.core.clients import make_client_update, make_eval_fn
 from repro.runtime import sharding
@@ -84,6 +85,13 @@ class SimConfig:
     #: additionally shard the tier-model stack over the mesh's pod axis
     #: (only meaningful when the mesh has one)
     shard_tiers: bool = False
+    #: population plane (core/population.py; spec section ``population``):
+    #: the indexed 100k-1M-client data planes (stacked/streaming) and the
+    #: FLGo-style availability/responsiveness/completion processes.  None
+    #: (the spec's all-defaults section) keeps the exact legacy
+    #: full-population stack — bitwise parity with the pre-population
+    #: environment.
+    population: Optional[population_mod.PopulationConfig] = None
 
 
 class SimEnv:
@@ -127,20 +135,52 @@ class SimEnv:
                 n_features=sc.n_features, vocab_size=sc.vocab_size,
                 seq_len=sc.seq_len,
                 attention_backend=sc.attention_backend))
-        self.ds = make_federated(
-            task=self.model.data_kind, n_clients=sc.n_clients,
-            n_classes=sc.n_classes,
-            classes_per_client=sc.classes_per_client,
-            samples_per_client=sc.samples_per_client, image_hw=sc.image_hw,
-            n_features=sc.n_features, seed=sc.seed,
-            partitioner=sc.partitioner, vocab_size=sc.vocab_size,
-            seq_len=sc.seq_len)
-        self.train = pad_stack(self.ds)
-        self.test = self._stack_test()
+        # population plane (None = legacy full-population environment);
+        # all its draws come from dedicated spec-seeded streams, so the
+        # environment rng below is untouched either way
+        self.population = (None if sc.population is None
+                           else population_mod.Population(
+                               sc.population, sc, self.model))
+        #: True when per-round batches are host-materialized and streamed
+        #: to the fused step instead of gathered from a resident stack
+        self.streaming = (self.population is not None
+                          and self.population.plane == "streaming")
+
+        if self.population is not None and self.population.cfg.indexed:
+            # indexed data plane: flat (N,) state arrays + lazy per-client
+            # content streams (core/population.py); the test stack only
+            # materializes the eval subset
+            pop = self.population
+            self.ds = None
+            self.n_train_all = pop.n_train
+            self.train = None if self.streaming else pop.materialize_stack()
+            self.test = pop.test_stack(pop.eval_ids)
+        else:
+            self.ds = make_federated(
+                task=self.model.data_kind, n_clients=sc.n_clients,
+                n_classes=sc.n_classes,
+                classes_per_client=sc.classes_per_client,
+                samples_per_client=sc.samples_per_client,
+                image_hw=sc.image_hw,
+                n_features=sc.n_features, seed=sc.seed,
+                partitioner=sc.partitioner, vocab_size=sc.vocab_size,
+                seq_len=sc.seq_len)
+            self.train = pad_stack(self.ds)
+            self.n_train_all = self.train["n_samples"]
+            self.test = self._stack_test()
+            if (self.population is not None
+                    and len(self.population.eval_ids) < sc.n_clients):
+                ids = self.population.eval_ids
+                self.test = {k: v[ids] for k, v in self.test.items()}
 
         # latency profile -> tiers (paper: 5 delay bands on top of compute)
         base = np.full(sc.n_clients, sc.base_compute)
         lat = tiering.profile_latencies(base, sc.delay_bands, rng)
+        if (self.population is not None
+                and self.population.resp_factors is not None):
+            # FLGo-style responsiveness: per-client multiplicative speed
+            # factors (dedicated RESP_STREAM) reshape the tier assignment
+            lat = lat * self.population.resp_factors
         self.tm = tiering.assign_tiers(lat, sc.n_tiers)
 
         # unstable clients drop permanently at a random time; the single
@@ -190,8 +230,11 @@ class SimEnv:
         # divides evenly; otherwise they stay replicated — the gather runs
         # in the auto-sharded region, so placement is a perf choice, not a
         # correctness one.
-        self.train_dev = {k: self._place_stack(self.train[k])
-                          for k in ("x", "y", "mask")}
+        # (the streaming plane has no resident stacks: the executor
+        # uploads one fixed-shape K-client batch per round instead)
+        self.train_dev = (None if self.train is None else
+                          {k: self._place_stack(self.train[k])
+                           for k in ("x", "y", "mask")})
         self._test_dev = None
         self._executor = None
 
@@ -237,13 +280,28 @@ class SimEnv:
         not inside a transient churn down-window.  A client sampled while
         up can be down by the time its round completes — the strategies
         re-filter on completion, which is how mid-round failures shrink
-        the participant set (Eq. 4 renormalizes over survivors)."""
+        the participant set (Eq. 4 renormalizes over survivors).  With a
+        population availability process the slotted Bernoulli mask is
+        folded in too (core/population.py)."""
         up = self.dropout_at > now
-        if self.churn_down is None:
-            return up
-        starts, ends = self.churn_down
-        down = ((starts <= now) & (now < ends)).any(axis=1)
-        return up & ~down
+        if self.churn_down is not None:
+            starts, ends = self.churn_down
+            down = ((starts <= now) & (now < ends)).any(axis=1)
+            up = up & ~down
+        if self.population is not None:
+            avail = self.population.availability_mask(now)
+            if avail is not None:
+                up = up & avail
+        return up
+
+    def completion(self, now: float) -> Optional[np.ndarray]:
+        """Per-client round-completion mask at ``now`` under the
+        population plane's completion process, or None when no process is
+        spec'd — the strategies then keep the exact legacy
+        completion-time paths (bitwise zero-population parity)."""
+        if self.population is None:
+            return None
+        return self.population.completion_mask(now)
 
     def retier(self, rng: np.random.Generator, drift: float = 0.2) -> bool:
         """Re-profile client latencies (multiplicative drift) and rebuild the
@@ -265,11 +323,31 @@ class SimEnv:
         return rng.choice(pool, k, replace=False)
 
     def client_batch(self, ids: np.ndarray) -> Dict[str, jnp.ndarray]:
+        if self.train is None:  # streaming plane: materialize on demand
+            return {k: jnp.asarray(v)
+                    for k, v in self.population.materialize(ids).items()}
         return {k: jnp.asarray(self.train[k][ids])
                 for k in ("x", "y", "mask")}
 
     def n_samples(self, ids: np.ndarray) -> jnp.ndarray:
-        return jnp.asarray(self.train["n_samples"][ids])
+        return jnp.asarray(self.n_train_all[ids])
+
+    def data_plane_bytes(self) -> int:
+        """Peak device-resident data-plane footprint in bytes: the train
+        stacks (resident planes) or the streamed per-round batch buffer
+        (streaming plane — the executor's high-water mark, or the static
+        bound before any round ran), plus the eval test stack.  The
+        streaming plane's flat-memory invariant (the bench's ``within 10%
+        of the 1k-client run``) is asserted over this number."""
+        test = sum(np.asarray(v).nbytes for v in self.test.values())
+        if self.train_dev is not None:
+            return test + sum(int(v.nbytes)
+                              for v in self.train_dev.values())
+        peak = (self._executor.stream_bytes
+                if self._executor is not None
+                and self._executor.stream_bytes else
+                self.population.batch_nbytes(self.sc.clients_per_round))
+        return test + peak
 
     def evaluate(self, params) -> Tuple[float, float]:
         """(weighted global accuracy, per-client accuracy variance)."""

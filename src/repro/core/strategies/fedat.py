@@ -86,6 +86,12 @@ class FedATStrategy(ServerStrategy):
             return Outcome.DISCARD
         alive = env.alive(now)
         ids = ids[alive[ids]]
+        done = env.completion(now)
+        if done is not None:
+            # population completion process: a sampled, still-alive client
+            # can fail to return its update this round — Eq. 4 renormalizes
+            # over the survivors inside the same fused step (no retrace)
+            ids = ids[done[ids]]
         if len(ids) == 0:  # whole sample dropped: reschedule the tier
             pool = env.tm.members[m][alive[env.tm.members[m]]]
             ids = env.sample_clients(pool, env.sc.clients_per_round, ctx.rng)

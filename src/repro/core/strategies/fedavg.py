@@ -68,6 +68,15 @@ class FedAvgStrategy(ServerStrategy):
         if len(ids) == 0:
             self._schedule(env, ctx)
             return Outcome.SKIP_ROUND
+        done = env.completion(now)
+        if done is not None:
+            # population completion process: drop the sampled clients that
+            # fail to report back; the sample-weighted average renormalizes
+            # over the survivors in the same fused step (no retrace)
+            ids = ids[done[ids]]
+            if len(ids) == 0:
+                self._schedule(env, ctx)
+                return Outcome.SKIP_ROUND
         ctx.bytes_down += len(ids) * env.model_bytes * self._ratio
         # fused round: gather resident data -> vmapped local train ->
         # sample-weighted FedAvg, one jitted call (core/executor.py)

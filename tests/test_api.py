@@ -41,22 +41,32 @@ def test_json_round_trip_golden():
     # is part of the provenance contract — changing any default field,
     # field name, or the canonicalization breaks attribution of archived
     # bench results and must be deliberate (bump SPEC_VERSION).
-    # v5 added the faults section (deterministic fault plane); v4 added
+    # v6 added the population section (million-client population plane;
+    # re-pinned from "f556a6283a5b" deliberately); v5 added the faults
+    # section (deterministic fault plane); v4 added
     # data.attention_backend (kernel-layer attention vs. the reference
     # oracle); v3 replaced data.task with the registry-backed data.model
     # (+ token knobs); v2 added the mesh section.
-    assert d["spec_version"] == api.SPEC_VERSION == 5
-    assert spec.hash() == "f556a6283a5b"
+    assert d["spec_version"] == api.SPEC_VERSION == 6
+    assert spec.hash() == "2a8635d9e5d9"
 
 
 def test_old_spec_documents_still_parse():
-    """Version-1/2/3/4 documents (no faults section pre-v5, data.task
-    enum pre-v3, no attention_backend pre-v4, v1 additionally pre-mesh)
-    parse to the same spec under SPEC_VERSION 5; unknown versions still
-    fail with the supported range.  (Full migration coverage lives in
+    """Version-1/2/3/4/5 documents (no population section pre-v6, no
+    faults section pre-v5, data.task enum pre-v3, no attention_backend
+    pre-v4, v1 additionally pre-mesh) parse to the same spec under
+    SPEC_VERSION 6; unknown versions still fail with the supported
+    range.  (Full migration coverage lives in
     tests/test_model_registry.py.)"""
     spec = api.ExperimentSpec()
     d = spec.to_dict()
+    d.pop("population")
+    d["spec_version"] = 5
+    back = api.ExperimentSpec.from_dict(d)
+    assert back == spec
+    # v5 docs get the default section = the legacy stacked plane exactly
+    assert back.population == api.PopulationSpec()
+    assert back.to_sim_config().population is None
     d.pop("faults")
     d["spec_version"] = 4
     back = api.ExperimentSpec.from_dict(d)
@@ -110,6 +120,36 @@ def test_unknown_field_rejected_with_valid_list():
         api.ExperimentSpec.from_dict({"datas": {}})
     with pytest.raises(api.SpecError, match=r"unknown spec field"):
         _small_spec().with_overrides({"tiers.n_teirs": 3})
+
+
+def test_population_section_validation_errors():
+    with pytest.raises(api.SpecError, match=r"population\.plane.*stream"):
+        _small_spec(**{"population.plane": "lazy"}).validate()
+    with pytest.raises(api.SpecError,
+                       match=r"population\.availability.*bernoulli"):
+        _small_spec(**{"population.availability": "poisson:3"}).validate()
+    with pytest.raises(api.SpecError,
+                       match=r"probability must be in \[0, 1\]"):
+        _small_spec(**{"population.completion": "bernoulli:1.5"}).validate()
+    with pytest.raises(api.SpecError,
+                       match=r"population\.responsiveness.*lognormal"):
+        _small_spec(**{"population.responsiveness": "gamma:2"}).validate()
+    with pytest.raises(api.SpecError, match=r"population\.eval_clients"):
+        _small_spec(**{"population.eval_clients": 99}).validate()
+
+
+def test_population_section_in_env_hash():
+    """The population scenario re-materializes the environment: the env
+    cache key must track it (and ignore it when inert)."""
+    spec = _small_spec()
+    assert spec.with_overrides(
+        {"population.plane": "streaming"}).env_hash() != spec.env_hash()
+    assert spec.with_overrides(
+        {"population.availability": "bernoulli:0.9"}).env_hash() \
+        != spec.env_hash()
+    # seed alone is inert config-wise but still hashes (it seeds streams)
+    assert spec.with_overrides(
+        {"population.seed": 1}).env_hash() != spec.env_hash()
 
 
 def test_unknown_registry_names_list_whats_registered():

@@ -297,3 +297,76 @@ def test_is_fault_event_discriminates_actor_tuples():
     assert not faults.is_fault_event((0, np.arange(3)))   # round event
     assert not faults.is_fault_event((3, 0))              # fedasync event
     assert not faults.is_fault_event(5)
+
+
+# ---------------------------------------------------------------------------
+# population x faults (the two planes compose)
+# ---------------------------------------------------------------------------
+
+def _pop_fault_spec(**faults_kwargs):
+    """Streaming-population variant of the small scenario with churn."""
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_clients=64, samples_per_client=24, image_hw=8),
+        tiers=api.TierSpec(n_tiers=2, clients_per_round=4, n_unstable=0),
+        engine=api.EngineSpec(total_updates=8, eval_every=4,
+                              local_epochs=1),
+        faults=api.FaultSpec(**faults_kwargs),
+        population=api.PopulationSpec(plane="streaming",
+                                      availability="bernoulli:0.8:20",
+                                      completion="bernoulli:0.9:20",
+                                      seed=3))
+
+
+def test_population_churned_clients_never_sampled():
+    """Fault-plane churn windows and the population availability process
+    both fold into alive(): a client inside a churn down-window (or an
+    unavailable slot) never enters a sampling pool."""
+    env = SimEnv(_pop_fault_spec(
+        churn_rate=1.0, churn_events=1, churn_downtime=20.0,
+        churn_window=(10.0, 11.0)).to_sim_config())
+    starts, ends = env.churn_down
+    rng = np.random.default_rng(0)
+    t_mid = float(starts[0, 0]) + 1e-3
+    alive = env.alive(t_mid)
+    assert not alive[0]                       # churned down
+    avail = env.population.availability_mask(t_mid)
+    assert not alive[~avail].any()            # availability folded in too
+    for _ in range(50):
+        pool = np.arange(env.sc.n_clients)[alive]
+        ids = env.sample_clients(pool, 4, rng)
+        assert alive[ids].all()
+        assert 0 not in ids
+
+
+def test_population_completion_renormalizes_without_retrace():
+    """Population completion drops survivors out of Eq. 4 inside the same
+    fused step: a full churny streaming run retraces nothing and stays
+    deterministic."""
+    spec = _pop_fault_spec(churn_rate=0.5, churn_events=2,
+                           churn_downtime=15.0, churn_window=(1.0, 40.0))
+    api.clear_env_cache()
+    run = api.build(spec)
+    m1 = run.run().metrics
+    tc = run.env.executor().trace_counts
+    assert tc and all(v == 1 for v in tc.values())
+    assert all("stream" in k for k in tc)
+    m2 = api.build(spec).run().metrics
+    assert m1.times == m2.times and m1.acc == m2.acc
+    assert np.isfinite(m1.acc).all()
+    api.clear_env_cache()
+
+
+def test_population_composes_with_gate_and_blackouts():
+    """The full stack at once: streaming population x churn x poisoning x
+    gate x blackout stays finite, deterministic, and one-trace."""
+    spec = _pop_fault_spec(nan_rate=0.5, update_clip=25.0, blackouts=1,
+                           blackout_window=(1.0, 20.0),
+                           blackout_duration=10.0)
+    api.clear_env_cache()
+    run = api.build(spec)
+    m1 = run.run().metrics
+    assert all(v == 1 for v in run.env.executor().trace_counts.values())
+    m2 = api.build(spec).run().metrics
+    assert m1.times == m2.times and m1.acc == m2.acc
+    assert np.isfinite(m1.acc).all()
+    api.clear_env_cache()

@@ -132,6 +132,31 @@ def test_one_device_host_mesh_is_bitwise_single_device():
     assert all(len(k) == 3 for k in env1.executor().trace_counts)
 
 
+@pytest.mark.skipif(len(__import__("jax").devices()) != 1,
+                    reason="bitwise D==1 contract needs exactly 1 device")
+@pytest.mark.parametrize("plane", ["stacked", "streaming"])
+def test_one_device_host_mesh_bitwise_under_population(plane):
+    """Population x mesh: the D == 1 bitwise contract holds under both
+    indexed population planes too — a one-device host mesh reproduces
+    the no-mesh trajectory exactly, whether the round data arrives via
+    the resident gather or the streamed batch."""
+    from repro.core.population import PopulationConfig
+    pop = PopulationConfig(plane=plane, availability="bernoulli:0.9:20",
+                           eval_clients=8, seed=3)
+    base = {**_BASE, "n_clients": 64, "n_unstable": 6}
+    env0 = SimEnv(SimConfig(**base, population=pop))
+    env1 = SimEnv(SimConfig(**base, mesh="host", population=pop))
+    cfg = FedATConfig(total_updates=8, eval_every=4)
+    m0, m1 = run_fedat(env0, cfg), run_fedat(env1, cfg)
+    assert m0.times == m1.times and m0.acc == m1.acc
+    assert m0.acc_var == m1.acc_var
+    assert set(env1.executor().trace_counts) \
+        == set(env0.executor().trace_counts)
+    want_stream = plane == "streaming"
+    assert all(("stream" in k) == want_stream
+               for k in env1.executor().trace_counts)
+
+
 # ---------------------------------------------------------------------------
 # D > 1: forced multi-device host mesh in a subprocess
 # ---------------------------------------------------------------------------
