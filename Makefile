@@ -4,8 +4,9 @@ export PYTHONPATH := src:$(PYTHONPATH)
 export JAX_PLATFORMS ?= cpu
 
 .PHONY: test test-kernels test-faultplane test-serve test-population \
-	bench-smoke bench-engine bench-roofline bench-serve smoke-example \
-	smoke-lm smoke-fault smoke-serve smoke-population docs check-docs
+	test-topology bench-smoke bench-engine bench-roofline bench-serve \
+	smoke-example smoke-lm smoke-fault smoke-serve smoke-population \
+	smoke-topology docs check-docs
 
 test:
 	$(PY) -m pytest -x -q
@@ -34,6 +35,13 @@ test-serve:
 # suites live in tests/test_population.py
 test-population:
 	$(PY) -m pytest -q tests/test_population.py
+
+# the topology plane as a required job of its own: the degenerate
+# bitwise contract (1-silo/1-edge zero-delay topology == flat FedAT),
+# per-link delay/codec/byte accounting, delayed-gradient compensation,
+# and the topology x faults x population cross-plane suites
+test-topology:
+	$(PY) -m pytest -q tests/test_topology.py
 
 # regenerate the introspected ExperimentSpec reference (docs/SPEC.md)
 docs:
@@ -103,6 +111,24 @@ smoke-population:
 	    --set population.availability=bernoulli:0.9:20 \
 	    --set population.eval_clients=32
 
+# 2-region hierarchical federation through the CLI: 2 silos x 2 edges,
+# WAN delay bands on every link class, a lossy silo->global WAN codec,
+# and delayed-gradient compensation on the stale silo path (CI runs
+# this on every push)
+smoke-topology:
+	$(PY) -m repro.api.cli \
+	    --set data.n_clients=16 --set data.samples_per_client=12 \
+	    --set data.image_hw=8 --set tiers.n_tiers=1 \
+	    --set tiers.clients_per_round=4 --set tiers.n_unstable=0 \
+	    --set engine.local_epochs=1 --set engine.total_updates=4 \
+	    --set engine.eval_every=2 \
+	    --set topology.n_silos=2 --set topology.edges_per_silo=2 \
+	    --set 'topology.delay.client_edge=[0.5,1.5]' \
+	    --set 'topology.delay.edge_silo=[1,3]' \
+	    --set 'topology.delay.silo_global=[2,6]' \
+	    --set topology.codec.silo_global=quantize8 \
+	    --set topology.compensation=0.5 --set topology.silo_skew=0.5
+
 bench-smoke:
 	$(PY) -m benchmarks.run codec codec_e2e kernels
 
@@ -119,12 +145,14 @@ bench-roofline:
 # multi-device host mesh, subprocess) + the federated-LM path
 # (tiny_lm with/without the polyline codec) + the fault-plane
 # degradation curve (0/5%/20% fault pressure) + the population plane
-# (streaming rounds at 1k/100k/1M clients, flat-memory pin) +
+# (streaming rounds at 1k/100k/1M clients, flat-memory pin) + the
+# topology plane (flat vs hierarchical ev/s, per-link-class wire bytes,
+# compensation vs staleness, degenerate bitwise pin re-checked) +
 # machine-readable JSON for cross-PR perf tracking
 bench-engine:
 	$(PY) -m benchmarks.run engine engine_scaled engine_lm \
 	    engine_faults engine_sharded engine_population \
-	    $(if $(SMOKE),--smoke) --json BENCH_engine.json
+	    engine_topology $(if $(SMOKE),--smoke) --json BENCH_engine.json
 
 # serving-plane latency under open-loop Poisson load, from spec-hash-
 # verified federated checkpoints (train -> checkpoint -> load -> serve):

@@ -539,6 +539,127 @@ def engine_population():
         api.clear_env_cache()   # free the (N,)-sized host state arrays
 
 
+def _topology_spec(total, lam=0.0, codec=None, seed=9):
+    """The topology-plane scenario: 2 regional silos x 2 edges over 32
+    clients with WAN delay bands on every link class and a strong
+    region skew (silo 1's WAN draws are 4x silo 0's), so the slow silo
+    commits genuinely stale Eq. 3 updates — the regime delayed-gradient
+    compensation targets.  The update budget is deliberately small: at
+    saturation every trajectory converges and the compensation axis
+    flattens out."""
+    return api.ExperimentSpec(
+        data=api.DataSpec(n_clients=32, classes_per_client=2,
+                          samples_per_client=24, image_hw=8, seed=seed),
+        tiers=api.TierSpec(n_tiers=1, clients_per_round=4, n_unstable=0),
+        strategy=api.StrategySpec("fedat"),
+        engine=api.EngineSpec(total_updates=total,
+                              eval_every=max(total // 4, 1),
+                              local_epochs=1),
+        topology=api.TopologySpec(
+            n_silos=2, edges_per_silo=2,
+            delay={"client_edge": (0.5, 1.5), "edge_silo": (1.0, 3.0),
+                   "silo_global": (20.0, 60.0)},
+            codec=codec or {}, silo_skew=3.0, compensation=lam))
+
+
+def engine_topology():
+    """Topology-plane axis (DESIGN.md §Topology-plane):
+
+    * the degenerate bitwise pin, re-checked on every bench run — a
+      1-silo/1-edge zero-delay topology replays the flat FedAT run
+      byte-for-byte (trajectory *and* wire bytes);
+    * flat vs hierarchical events/sec on the same 32-client workload;
+    * the hierarchical row with distinct per-link codecs, recording the
+      per-link-class wire bytes (client_edge / edge_silo / silo_global
+      are separate ledgers — the WAN hop can be compressed harder);
+    * the region-skew accuracy axis: compensation lambda=0 vs 0.8 under
+      a 4x-skewed WAN, recording ``comp_beats_uncomp`` (the acceptance
+      bound: the compensated run ends at higher final accuracy)."""
+    total = 24 if SMOKE[0] else 40
+
+    # -- degenerate bitwise pin ---------------------------------------
+    # the same scenario with the topology section dialed back to its
+    # defaults (to_config() is None -> the flat engine), and the
+    # degenerate *active* topology on top (1 silo, 1 edge, a zero-width
+    # delay band keeps the section active without adding any delay)
+    flat = _topology_spec(total).with_overrides({
+        "topology.n_silos": 1, "topology.edges_per_silo": 1,
+        "topology.delay": {}, "topology.silo_skew": 0.0})
+    degen = flat.with_overrides({
+        "topology.delay.silo_global": [0.0, 0.0]})
+    m_flat = api.run_spec(flat).metrics
+    m_degen = api.run_spec(degen).metrics
+    bitwise = (m_flat.times == m_degen.times and m_flat.acc == m_degen.acc
+               and m_flat.bytes_up == m_degen.bytes_up
+               and m_flat.bytes_down == m_degen.bytes_down)
+    emit("engine/topology_degenerate_pin", 0.0,
+         f"degenerate_bitwise_eq_flat={bitwise}")
+    JSON_DOC["results"].append({
+        "strategy": "fedat", "scenario": "topology_degenerate_pin",
+        "degenerate_bitwise_eq_flat": bitwise,
+        "spec_hash": degen.hash(),
+    })
+
+    # -- flat vs hierarchical events/sec + per-link wire bytes --------
+    rows = {}
+    for tag, spec in (
+        ("topology_flat", flat),
+        ("topology_hier", _topology_spec(
+            total, codec={"client_edge": "quantize8",
+                          "silo_global": "quantize8"})),
+    ):
+        warm = spec.with_overrides({"engine.total_updates": 5})
+        api.build(warm).run()        # warm: compile the step once
+        run = api.build(spec)
+        t0 = time.perf_counter()
+        m = run.run().metrics
+        dt = time.perf_counter() - t0
+        rec = {
+            "strategy": "fedat", "scenario": tag,
+            "total_updates": total,
+            "events_per_sec": round(total / dt, 3),
+            "us_per_event": round(dt / total * 1e6, 1),
+            "best_acc": round(m.best_acc, 4),
+            "final_acc": round(m.acc[-1], 4),
+            "spec_hash": spec.hash(),
+        }
+        detail = f"events_per_sec={total / dt:.2f};acc={m.best_acc:.3f}"
+        if tag == "topology_hier":
+            lb = run.strategy.link_bytes
+            rec["link_bytes"] = {k: int(v) for k, v in lb.items()}
+            detail += ";" + ";".join(
+                f"{k}_mb={v / 1e6:.2f}" for k, v in sorted(lb.items()))
+        emit(f"engine/{tag}", dt / total * 1e6, detail)
+        rows[tag] = rec
+        JSON_DOC["results"].append(rec)
+
+    # -- region skew: compensation on vs off --------------------------
+    finals = {}
+    for lam in (0.0, 0.8):
+        spec = _topology_spec(total, lam=lam)
+        m = api.run_spec(spec).metrics
+        finals[lam] = m.acc[-1]
+        tag = f"topology_skew_lam{lam:g}"
+        emit(f"engine/{tag}", 0.0,
+             f"final_acc={m.acc[-1]:.3f};best_acc={m.best_acc:.3f}")
+        JSON_DOC["results"].append({
+            "strategy": "fedat", "scenario": tag,
+            "total_updates": total, "compensation": lam,
+            "final_acc": round(m.acc[-1], 4),
+            "best_acc": round(m.best_acc, 4),
+            "spec_hash": spec.hash(),
+        })
+    beats = finals[0.8] > finals[0.0]
+    emit("engine/topology_compensation", 0.0,
+         f"comp_beats_uncomp={beats}")
+    JSON_DOC["results"].append({
+        "strategy": "fedat", "scenario": "topology_compensation",
+        "final_acc_lam0": round(finals[0.0], 4),
+        "final_acc_lam08": round(finals[0.8], 4),
+        "comp_beats_uncomp": beats,
+    })
+
+
 def engine_sharded():
     """The scaled scenario under a multi-device host mesh, measured in a
     subprocess with ``--xla_force_host_platform_device_count`` (the only
@@ -667,6 +788,7 @@ ALL = {
     "engine_lm": engine_lm,
     "engine_faults": engine_faults,
     "engine_population": engine_population,
+    "engine_topology": engine_topology,
     "engine_sharded": engine_sharded,
     "roofline": roofline,
     "kernels": kernels,
@@ -675,7 +797,8 @@ ALL = {
 
 #: targets whose structured results --json records
 _JSON_TARGETS = ("engine", "engine_scaled", "engine_lm", "engine_faults",
-                 "engine_population", "engine_sharded", "roofline")
+                 "engine_population", "engine_topology", "engine_sharded",
+                 "roofline")
 
 
 def _write_json(path: str) -> None:

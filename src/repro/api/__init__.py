@@ -21,4 +21,4 @@ from repro.api.build import (Result, Run, build, clear_env_cache,  # noqa: F401
 from repro.api.spec import (SPEC_VERSION, DataSpec, EngineSpec,  # noqa: F401
                             ExperimentSpec, FaultSpec, MeshSpec,
                             PopulationSpec, SpecError, StrategySpec,
-                            TierSpec, TransportSpec)
+                            TierSpec, TopologySpec, TransportSpec)

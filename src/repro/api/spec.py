@@ -14,7 +14,10 @@ server policy — from five nested sections:
     poisoned uplinks, crash-resume cadence)
   * :class:`PopulationSpec` million-client population plane (streaming
     data path, FLGo-style availability/responsiveness/completion
-    processes)
+    processes, bundled device-class profiles)
+  * :class:`TopologySpec`  hierarchical geo-distributed tree (clients ->
+    edge aggregators -> regional silos -> global server) with per-link
+    delay bands, per-link codecs, and delayed-gradient compensation
 
 The spec is plain data: ``to_dict``/``from_dict`` round-trip through JSON
 (``from_dict`` rejects unknown fields with the valid-field list), and
@@ -39,8 +42,20 @@ from typing import Any, Dict, Optional, Tuple
 
 from repro.compress import transport
 from repro.core import population as population_mod
+from repro.core import topology as topology_mod
 from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 
+#: Version 7 added the ``topology`` section (hierarchical
+#: geo-distributed federation, DESIGN.md §Topology-plane): a declarative
+#: clients -> edge aggregators -> regional silos -> global server tree
+#: where each link class (``client_edge`` / ``edge_silo`` /
+#: ``silo_global``) carries its own deterministic delay band (a
+#: dedicated topology rng stream) and its own transport codec, silos
+#: enter Eq. 3 asynchronously with the straggler-aware cross weights,
+#: and slow silo links can apply delayed-gradient compensation.  The
+#: all-defaults section is *exactly* the flat FedAT engine — bitwise
+#: identical; the degenerate 1-silo/1-edge zero-delay tree is pinned
+#: bitwise against the flat run too.
 #: Version 6 added the ``population`` section (million-client population
 #: plane, DESIGN.md §Population-plane): an indexed client generator with
 #: a streaming/gather data path where only the K sampled clients per
@@ -62,14 +77,16 @@ from repro.core.simulation import PAPER_DELAY_BANDS, SimConfig
 #: (client-sharded round executor).  Version-1/2/3/4 documents still
 #: parse — a ``task`` key migrates through the deprecation shim
 #: (``image`` -> ``cnn``, ``text`` -> ``logreg``), missing
-#: ``mesh``/``attention_backend``/``faults``/``population`` get their
-#: defaults (a defaulted ``faults`` section is exactly the zero-fault
-#: engine; a defaulted ``population`` section is exactly the legacy
-#: stacked plane) — but serialization always emits the current version,
-#: so hashes of re-serialized old specs change (deliberately: the
-#: population scenario is now part of what a result is attributable to).
-SPEC_VERSION = 6
-_READABLE_VERSIONS = (1, 2, 3, 4, 5, 6)
+#: ``mesh``/``attention_backend``/``faults``/``population``/``topology``
+#: get their defaults (a defaulted ``faults`` section is exactly the
+#: zero-fault engine; a defaulted ``population`` section is exactly the
+#: legacy stacked plane; a defaulted ``topology`` section is exactly the
+#: flat FedAT engine) — but serialization always emits the current
+#: version, so hashes of re-serialized old specs change (deliberately:
+#: the topology scenario is now part of what a result is attributable
+#: to).
+SPEC_VERSION = 7
+_READABLE_VERSIONS = (1, 2, 3, 4, 5, 6, 7)
 
 def _resolve_legacy_task(task: Any, existing_model: Optional[str]) -> str:
     """The ``data.task`` deprecation shim shared by ``from_dict`` and
@@ -323,7 +340,8 @@ class MeshSpec:
         kind, n_pods = mesh_mod.parse_mesh_name(name)
         return cls(kind=kind, n_pods=n_pods, shard_tiers=shard_tiers)
 
-    def validate(self, clients_per_round: int) -> None:
+    def validate(self, clients_per_round: int,
+                 k_field: str = "tiers.clients_per_round") -> None:
         from repro.launch import mesh as mesh_mod
         _require(self.kind in mesh_mod.MESH_KINDS,
                  f"mesh.kind must be one of {mesh_mod.MESH_KINDS}, "
@@ -346,7 +364,7 @@ class MeshSpec:
         if d and clients_per_round % d:
             k = clients_per_round
             raise SpecError(
-                f"tiers.clients_per_round={k} does not pad to a multiple "
+                f"{k_field}={k} does not pad to a multiple "
                 f"of the {self.kind} mesh data axis (size {d}); use a "
                 f"multiple of {d} (e.g. {((k + d - 1) // d) * d}).  For "
                 f"'host' meshes this is checked at build time against the "
@@ -447,9 +465,11 @@ class PopulationSpec:
     The stochastic client-state processes follow FLGo's taxonomy and are
     drawn from dedicated population rng streams seeded by ``seed``:
 
-    * ``availability`` — ``"always"`` or ``"bernoulli:<p>[:<period>]"``:
-      per time-slot of length ``period`` (default 20 sim-seconds), each
-      client is available with probability p (fresh iid draw per slot).
+    * ``availability`` — ``"always"``, ``"bernoulli:<p>[:<period>]"``
+      (per time-slot of length ``period``, default 20 sim-seconds, each
+      client is available with probability p — fresh iid draw per slot),
+      or the diurnal ``"sine:<p>,<amp>,<period>"`` (the slot probability
+      follows ``clip(p + amp*sin(2*pi*t/period), 0, 1)``).
     * ``responsiveness`` — ``"none"``, ``"lognormal:<sigma>"`` or
       ``"uniform:<lo>,<hi>"``: a per-client latency multiplier applied
       to the profiled latencies *before* tier assignment.
@@ -457,6 +477,14 @@ class PopulationSpec:
       that a sampled client actually completes its round (incomplete
       clients are dropped before Eq. 4, which renormalizes over the
       survivors without retracing).
+
+    ``profile`` bundles the three processes into device-class presets:
+    ``"phone:<frac>"`` marks that fraction of clients as phone-like
+    (diurnal sine availability, lognormal responsiveness, bernoulli
+    completion — ``core/population.PHONE_PRESET``) with the rest staying
+    always-on; the class assignment draws from its own dedicated stream.
+    A profile owns the process fields, so combining it with explicit
+    non-default availability/responsiveness/completion is rejected.
 
     ``eval_clients`` caps the server-side eval set to a fixed random
     subset (0 = every client), which keeps the test stack O(1) in N.
@@ -466,6 +494,9 @@ class PopulationSpec:
     availability: str = "always"
     responsiveness: str = "none"
     completion: str = "none"
+    #: "none" or "phone:<frac>" — bundled device-class preset (owns the
+    #: three process fields above)
+    profile: str = "none"
     #: eval on a fixed random subset of this many clients (0 = all)
     eval_clients: int = 0
     #: the dedicated population rng stream seed
@@ -486,6 +517,17 @@ class PopulationSpec:
             population_mod.parse_responsiveness(self.responsiveness)
         except ValueError as e:
             raise SpecError(f"population.responsiveness: {e}")
+        try:
+            prof = population_mod.parse_profile(self.profile)
+        except ValueError as e:
+            raise SpecError(f"population.profile: {e}")
+        if prof is not None and (self.availability != "always"
+                                 or self.responsiveness != "none"
+                                 or self.completion != "none"):
+            raise SpecError(
+                f"population.profile={self.profile!r} owns the "
+                f"availability/responsiveness/completion processes; drop "
+                f"the explicit process fields (or drop the profile)")
         _require(0 <= self.eval_clients <= n_clients,
                  f"population.eval_clients must be in "
                  f"[0, n_clients={n_clients}], got {self.eval_clients}")
@@ -496,6 +538,7 @@ class PopulationSpec:
         cfg = population_mod.PopulationConfig(
             plane=self.plane, availability=self.availability,
             responsiveness=self.responsiveness, completion=self.completion,
+            profile=self.profile,
             eval_clients=self.eval_clients, seed=self.seed)
         return cfg if cfg.active else None
 
@@ -507,8 +550,125 @@ class PopulationSpec:
             return cls()
         return cls(plane=pc.plane, availability=pc.availability,
                    responsiveness=pc.responsiveness,
-                   completion=pc.completion,
+                   completion=pc.completion, profile=pc.profile,
                    eval_clients=pc.eval_clients, seed=pc.seed)
+
+
+@dataclasses.dataclass
+class TopologySpec:
+    """Hierarchical geo-distributed federation (DESIGN.md
+    §Topology-plane).
+
+    The tree is clients -> ``edges_per_silo`` edge aggregators per silo
+    -> ``n_silos`` regional silos -> the global server.  Silos take
+    contiguous client-id blocks (region skew under the ``#class``
+    partitioner); edges within a silo are latency tiers.  Edges run the
+    synchronous intra-tier Eq. 4 average; each silo enters the global
+    Eq. 3 asynchronously with the straggler-aware cross weights (slow
+    silos renormalize out during blackouts via the elastic layer).
+
+    Each of the three link classes (``client_edge``, ``edge_silo``,
+    ``silo_global``) takes an optional uniform delay band under
+    ``delay`` (drawn per scheduled silo round from the dedicated
+    topology rng stream, composing with population responsiveness and
+    fault churn) and an optional codec override under ``codec``
+    (``client_edge`` defaults to the strategy/transport codec,
+    the WAN hops default to ``none``); per-link wire bytes are
+    accounted separately by the strategy.  ``compensation`` is the
+    delayed-gradient strength ``lam``: a silo's update is corrected by
+    ``lam * (w_global_now - w_global_at_dispatch)`` before Eq. 3
+    ("Stragglers Are Not Disaster", PAPERS.md).
+
+    The all-defaults section maps to *no* topology config (the flat
+    FedAT engine, bitwise); the degenerate 1-silo/1-edge zero-delay
+    tree is pinned bitwise against the flat ``n_tiers=1`` run.
+    """
+    n_silos: int = 1
+    edges_per_silo: int = 1
+    #: clients sampled per edge per round (0 = tiers.clients_per_round)
+    clients_per_edge: int = 0
+    #: per-link-class [lo, hi] uniform delay bands, e.g.
+    #: {"silo_global": [5, 20]}
+    delay: Dict[str, Tuple[float, float]] = dataclasses.field(
+        default_factory=dict)
+    #: per-link-class codec overrides, e.g. {"silo_global": "quantize8"}
+    codec: Dict[str, str] = dataclasses.field(default_factory=dict)
+    #: delayed-gradient compensation strength lam in [0, 1] (0 = off)
+    compensation: float = 0.0
+    #: silo s multiplies its silo_global delay by 1 + silo_skew * s
+    silo_skew: float = 0.0
+    #: the dedicated topology rng stream seed
+    seed: int = 0
+
+    def __post_init__(self):
+        self.delay = {k: tuple(float(x) for x in v)
+                      for k, v in self.delay.items()}
+        self.codec = dict(self.codec)
+
+    def validate(self, n_clients: int) -> None:
+        _require(self.n_silos >= 1 and self.edges_per_silo >= 1,
+                 f"topology.n_silos and topology.edges_per_silo must be "
+                 f">= 1, got ({self.n_silos}, {self.edges_per_silo})")
+        _require(self.n_silos * self.edges_per_silo <= n_clients,
+                 f"topology needs n_silos * edges_per_silo <= "
+                 f"n_clients={n_clients}, got "
+                 f"{self.n_silos} * {self.edges_per_silo}")
+        _require(self.clients_per_edge >= 0,
+                 f"topology.clients_per_edge must be >= 0 (0 = inherit "
+                 f"tiers.clients_per_round), got {self.clients_per_edge}")
+        for field_name, mapping in (("delay", self.delay),
+                                    ("codec", self.codec)):
+            unknown = sorted(set(mapping) - set(topology_mod.LINK_CLASSES))
+            if unknown:
+                raise SpecError(
+                    f"topology.{field_name} names unknown link class(es) "
+                    f"{unknown}; the tree (clients -> edges -> silos -> "
+                    f"global) has exactly these link classes: "
+                    f"{list(topology_mod.LINK_CLASSES)}")
+        for link, band in self.delay.items():
+            _require(len(band) == 2 and 0 <= band[0] <= band[1],
+                     f"topology.delay[{link!r}] must be [lo, hi] with "
+                     f"0 <= lo <= hi, got {list(band)}")
+        for link, codec in self.codec.items():
+            try:
+                transport.get_codec(codec)
+            except ValueError as e:
+                raise SpecError(f"topology.codec[{link!r}]: {e}")
+        _require(0 <= self.compensation <= 1,
+                 f"topology.compensation must be in [0, 1], "
+                 f"got {self.compensation}")
+        _require(self.silo_skew >= 0,
+                 f"topology.silo_skew must be >= 0, got {self.silo_skew}")
+
+    def to_config(self) -> Optional[topology_mod.TopologyConfig]:
+        """The :class:`SimConfig` payload; ``None`` when every knob is at
+        its default (modulo seed), which is *exactly* the flat engine."""
+        if (self.n_silos == 1 and self.edges_per_silo == 1
+                and self.clients_per_edge == 0 and not self.delay
+                and not self.codec and self.compensation == 0
+                and self.silo_skew == 0):
+            return None
+        return topology_mod.TopologyConfig(
+            n_silos=self.n_silos, edges_per_silo=self.edges_per_silo,
+            clients_per_edge=self.clients_per_edge,
+            delay=tuple((k, lo, hi)
+                        for k, (lo, hi) in sorted(self.delay.items())),
+            codec=tuple(sorted(self.codec.items())),
+            compensation=self.compensation, silo_skew=self.silo_skew,
+            seed=self.seed)
+
+    @classmethod
+    def from_config(
+            cls, tc: Optional[topology_mod.TopologyConfig]
+    ) -> "TopologySpec":
+        if tc is None:
+            return cls()
+        return cls(n_silos=tc.n_silos, edges_per_silo=tc.edges_per_silo,
+                   clients_per_edge=tc.clients_per_edge,
+                   delay={k: (lo, hi) for k, lo, hi in tc.delay},
+                   codec=dict(tc.codec),
+                   compensation=tc.compensation, silo_skew=tc.silo_skew,
+                   seed=tc.seed)
 
 
 # ---------------------------------------------------------------------------
@@ -518,7 +678,7 @@ class PopulationSpec:
 _SECTIONS = {"data": DataSpec, "tiers": TierSpec, "strategy": StrategySpec,
              "transport": TransportSpec, "engine": EngineSpec,
              "mesh": MeshSpec, "faults": FaultSpec,
-             "population": PopulationSpec}
+             "population": PopulationSpec, "topology": TopologySpec}
 
 
 @dataclasses.dataclass
@@ -533,6 +693,7 @@ class ExperimentSpec:
     faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     population: PopulationSpec = dataclasses.field(
         default_factory=PopulationSpec)
+    topology: TopologySpec = dataclasses.field(default_factory=TopologySpec)
 
     # -- validation -----------------------------------------------------
     def validate(self) -> "ExperimentSpec":
@@ -544,6 +705,22 @@ class ExperimentSpec:
         self.mesh.validate(self.tiers.clients_per_round)
         self.faults.validate()
         self.population.validate(self.data.n_clients)
+        self.topology.validate(self.data.n_clients)
+        if self.topology.to_config() is not None:
+            if self.topology.clients_per_edge:
+                self.mesh.validate(self.topology.clients_per_edge,
+                                   k_field="topology.clients_per_edge")
+            _require(self.strategy.name == "fedat",
+                     f"the topology plane runs the tiered FedAT strategy "
+                     f"(edges = Eq. 4, silos = Eq. 3); got "
+                     f"strategy.name={self.strategy.name!r} — drop the "
+                     f"topology section or use fedat")
+            _require(self.faults.nan_rate == 0
+                     and self.faults.update_clip == 0,
+                     "the server-side validation gate (faults.nan_rate / "
+                     "faults.update_clip) is not supported under the "
+                     "topology plane yet; churn, blackouts and "
+                     "crash-resume all compose")
         return self
 
     # -- serialization --------------------------------------------------
@@ -554,6 +731,8 @@ class ExperimentSpec:
         d["tiers"]["dropout_window"] = list(self.tiers.dropout_window)
         d["faults"]["churn_window"] = list(self.faults.churn_window)
         d["faults"]["blackout_window"] = list(self.faults.blackout_window)
+        d["topology"]["delay"] = {k: list(v) for k, v
+                                  in self.topology.delay.items()}
         d["spec_version"] = SPEC_VERSION
         return d
 
@@ -630,7 +809,8 @@ class ExperimentSpec:
                                    "seed")}
         return {"data": d["data"], "tiers": tiers, "local": local,
                 "mesh": d["mesh"], "churn": churn,
-                "population": d["population"]}
+                "population": d["population"],
+                "topology": d["topology"]}
 
     def env_hash(self) -> str:
         return hashlib.sha256(json.dumps(
@@ -663,7 +843,13 @@ class ExperimentSpec:
                         f"{sorted(_SECTIONS)}")
                 cur = cur[p]
             leaf = parts[-1]
-            open_dict = len(parts) >= 2 and parts[-2] == "kwargs"
+            # open dicts: strategy.kwargs by design, and the per-link
+            # topology.delay / topology.codec maps (keys are validated
+            # against LINK_CLASSES in TopologySpec.validate)
+            open_dict = len(parts) >= 2 and (
+                parts[-2] == "kwargs"
+                or (parts[0] == "topology"
+                    and parts[-2] in ("delay", "codec")))
             if not isinstance(cur, dict) or (leaf not in cur
                                              and not open_dict):
                 raise SpecError(
@@ -701,7 +887,8 @@ class ExperimentSpec:
             churn_downtime=self.faults.churn_downtime,
             churn_window=self.faults.churn_window,
             fault_seed=self.faults.seed,
-            population=self.population.to_config())
+            population=self.population.to_config(),
+            topology=self.topology.to_config())
 
     @classmethod
     def from_sim_config(cls, sc: SimConfig) -> "ExperimentSpec":
@@ -730,4 +917,5 @@ class ExperimentSpec:
                 churn_rate=sc.churn_rate, churn_events=sc.churn_events,
                 churn_downtime=sc.churn_downtime,
                 churn_window=sc.churn_window, seed=sc.fault_seed),
-            population=PopulationSpec.from_config(sc.population))
+            population=PopulationSpec.from_config(sc.population),
+            topology=TopologySpec.from_config(sc.topology))

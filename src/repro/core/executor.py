@@ -141,6 +141,12 @@ class RoundExecutor:
         #: tag; the step bodies themselves are shared (``_select``).
         self.streaming = bool(getattr(env, "streaming", False))
         self._tag: Tuple[str, ...] = ("stream",) if self.streaming else ()
+        #: topology plane (core/topology.py): per-silo rounds fan out
+        #: over E edges x K_edge clients in one fused step; None = flat.
+        self.topo = getattr(env, "topology", None)
+        if self.topo is not None:
+            self.E = int(self.topo.edges_per_silo)
+            self.K_edge = int(self.topo.k_edge)
         #: high-water mark of the streamed per-round batch bytes (0 until
         #: a streaming round runs; SimEnv.data_plane_bytes reads it)
         self.stream_bytes = 0
@@ -202,6 +208,50 @@ class RoundExecutor:
         self.stream_bytes = max(self.stream_bytes,
                                 sum(a.nbytes for a in batch.values()))
         return {k: jnp.asarray(v) for k, v in batch.items()}
+
+    def _pad_topology(self, ids_edges):
+        """Per-edge live id lists -> the flat (E*K_edge,) padded id
+        vector plus the eagerly-normalized weight vectors: ``w_intra`` is
+        per-edge Eq. 4 normalized (each edge's K_edge slots sum to 1 over
+        its live clients; empty edges stay all-zero), ``w_edge`` is the
+        Eq. 4-over-edges weights ∝ per-edge live sample mass (renormalized
+        over non-empty edges).  Dead slots repeat a live id from any edge
+        (valid gather target) behind exactly-zero weights — the same
+        bitwise-neutral padding contract as :meth:`_pad_ids`."""
+        E, Ke = self.E, self.K_edge
+        fallback = next(int(ids[0]) for ids in ids_edges if len(ids))
+        pid = np.full(E * Ke, fallback, np.int32)
+        ns = np.zeros(E * Ke, np.float32)
+        w_intra = np.zeros(E * Ke, np.float32)
+        edge_samples = np.zeros(E, np.float32)
+        counts = []
+        for e, ids in enumerate(ids_edges):
+            n = len(ids)
+            counts.append(n)
+            if n:
+                pid[e * Ke:e * Ke + n] = ids
+                ns[e * Ke:e * Ke + n] = self.env.n_train_all[ids]
+                w_intra[e * Ke:(e + 1) * Ke] = \
+                    aggregation.client_weights_host(ns[e * Ke:(e + 1) * Ke])
+                edge_samples[e] = ns[e * Ke:(e + 1) * Ke].sum(
+                    dtype=np.float32)
+        return pid, w_intra, aggregation.client_weights_host(edge_samples), \
+            counts
+
+    def _pad_topology_keys(self, seed: int, counts) -> jax.Array:
+        """Split to the total live count (one split call, rng parity with
+        the flat round), then scatter each edge's keys into the head of
+        its K_edge slot block; padded rows are zero keys behind zero
+        weights."""
+        E, Ke = self.E, self.K_edge
+        keys = np.asarray(jax.random.split(jax.random.PRNGKey(seed),
+                                           sum(counts)))
+        out = np.zeros((E * Ke,) + keys.shape[1:], keys.dtype)
+        off = 0
+        for e, n in enumerate(counts):
+            out[e * Ke:e * Ke + n] = keys[off:off + n]
+            off += n
+        return jnp.asarray(out)
 
     # ------------------------------------------------------------------
     # fused steps (one compile per configuration, cached)
@@ -329,6 +379,81 @@ class RoundExecutor:
             return w_global, tier_models
 
         self._steps[key] = jax.jit(step, donate_argnums=_donate((0, 1)))
+        return self._steps[key]
+
+    def _fedat_topology_step(self, codecs, use_prox: bool):
+        """One fused hierarchical silo round (DESIGN.md §Topology-plane):
+        downlink codec chain (silo_global -> edge_silo -> client_edge) on
+        the silo's *dispatch-time* global snapshot → vmapped local train
+        over all E x K_edge sampled clients → client_edge uplink lossy →
+        per-edge Eq. 4 (static unroll over edges, exactly the flat Eq. 4
+        body per edge) → edge_silo lossy → Eq. 4 over edges (weights ∝
+        live sample mass, renormalized over non-empty edges) → silo_global
+        lossy → optional delayed-gradient compensation
+        ``lam * (w_global_now - w_dispatch)`` → silo-slot scatter →
+        Eq. 3 over the silo stack.
+
+        With 1 silo / 1 edge, zero-width delay bands and default codecs
+        every extra stage is an exact identity (x1.0 singleton averages,
+        bitwise-neutral pins), so this step reproduces the flat
+        :meth:`_fedat_step` trajectory bitwise — pinned by
+        tests/test_topology.py.
+        """
+        ce, es, sg = codecs
+        for c in codecs:
+            self._check_in_graph(c)
+        lam = float(self.topo.cfg.compensation)
+        key = ("fedat_topo", ce.name, es.name, sg.name, use_prox, lam) \
+            + self._tag
+        if key in self._steps:
+            return self._steps[key]
+        env = self.env
+        update = env.update_fn_raw if use_prox else env.update_fn_noprox_raw
+        E, Ke = self.E, self.K_edge
+        lam32 = jnp.float32(lam)
+
+        def step(w_global, silo_models, dispatch, s, data, w_intra,
+                 w_edge, w_cross, keys):
+            self._bump(key)
+            # the silo trains from the global model it fetched when this
+            # round was dispatched (stale under WAN delay), compressed by
+            # the downlink chain global -> silo -> edge -> client
+            w_stale = _pin(jax.tree.map(lambda d: d[s], dispatch))
+            w_sent = _pin(ce.lossy(_pin(es.lossy(_pin(sg.lossy(w_stale))))))
+            client_params, _ = update(w_sent, self._select(data), keys)
+            client_params = _pin(ce.lossy(_pin(client_params)))
+            # per-edge Eq. 4 over each edge's K_edge slots — a static
+            # unroll so each edge runs the exact flat Eq. 4 body
+            edge_models = []
+            for e in range(E):
+                pe = jax.tree.map(lambda l, e=e: l[e * Ke:(e + 1) * Ke],
+                                  client_params)
+                em = _pin(aggregation.weighted_average(
+                    pe, w_intra[e * Ke:(e + 1) * Ke]))
+                edge_models.append(_pin(es.lossy(_pin(em))))
+            edge_stack = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                      *edge_models)
+            silo_model = _pin(aggregation.weighted_average(
+                edge_stack, w_edge))
+            silo_model = _pin(sg.lossy(_pin(silo_model)))
+            if lam > 0:
+                # delayed-gradient compensation ("Stragglers Are Not
+                # Disaster"): restore lam of the global drift the silo
+                # missed while its round was in flight; the product is
+                # pinned so the add never FMA-contracts
+                silo_model = _pin(jax.tree.map(
+                    lambda m_, g, st: m_ + jax.lax.optimization_barrier(
+                        lam32 * (g - st)),
+                    silo_model, w_global, w_stale))
+            silo_models = self._tier_place(jax.tree.map(
+                lambda st, nw: st.at[s].set(nw), silo_models, silo_model))
+            w_new = aggregation.weighted_average(silo_models, w_cross)
+            # the silo re-fetches the fresh global for its next round
+            dispatch = jax.tree.map(lambda d, g: d.at[s].set(g),
+                                    dispatch, w_new)
+            return w_new, silo_models, dispatch
+
+        self._steps[key] = jax.jit(step, donate_argnums=_donate((1, 2)))
         return self._steps[key]
 
     def _fedat_step_gated(self, codec, use_prox: bool, gate):
@@ -506,6 +631,37 @@ class RoundExecutor:
         return step(w_global, tier_models, np.int32(m), data,
                     aggregation.client_weights_host(ns), cross_weights,
                     keys, poison)
+
+    def fedat_topology_round(self, w_global, silo_models, dispatch, s: int,
+                             ids_edges, seed: int, *, codecs,
+                             use_prox: bool, cross_weights):
+        """One hierarchical silo round (DESIGN.md §Topology-plane), fused.
+
+        ``ids_edges`` is a length-E sequence of per-edge live client id
+        arrays (already availability/completion filtered; at least one
+        must be non-empty).  ``codecs`` is the (client_edge, edge_silo,
+        silo_global) codec triple; ``cross_weights`` the (S,) Eq. 3
+        vector, computed eagerly by the strategy.  Returns ``(w_global,
+        silo_models, dispatch)`` — the dispatch stack's silo-s slot is
+        refreshed to the new global in-graph (the silo re-fetches on its
+        next round; resample/blackout paths refresh it eagerly instead).
+
+        Donation: ``silo_models``/``dispatch`` may be donated (TPU/GPU);
+        ``w_global`` is never donated — the compensation term reads it
+        next to the dispatch snapshot that may alias it.
+        """
+        if self.D > 1:
+            raise NotImplementedError(
+                f"the topology plane is single-data-axis for now (mesh "
+                f"data axis D={self.D}); use a D==1 mesh — multi-pod "
+                f"host meshes with one device per pod still map silos "
+                f"onto the pod axis (mesh.shard_tiers)")
+        pid, w_intra, w_edge, counts = self._pad_topology(ids_edges)
+        data = self._round_data(pid)
+        keys = self._pad_topology_keys(seed, counts)
+        step = self._fedat_topology_step(codecs, use_prox)
+        return step(w_global, silo_models, dispatch, np.int32(s), data,
+                    w_intra, w_edge, cross_weights, keys)
 
     def fedavg_round(self, w, ids: np.ndarray, seed: int, *, codec=None,
                      gate=None, poison=None):

@@ -67,6 +67,7 @@ AVAIL_STREAM = 0xA3A11       # slotted availability masks ([.., .., slot])
 RESP_STREAM = 0x4E592        # per-client responsiveness multipliers
 COMPL_STREAM = 0xC03B1       # slotted completion masks ([.., .., slot])
 EVAL_STREAM = 0xE3A1C        # the eval-subset draw
+PROFILE_STREAM = 0x9404E     # device-class membership (profile presets)
 
 #: accepted data planes (PopulationConfig.plane)
 PLANES = ("legacy", "stacked", "streaming")
@@ -81,6 +82,14 @@ MIN_SAMPLES = 20
 #: default slot width (sim seconds) for the slotted Bernoulli processes
 DEFAULT_PERIOD = 20.0
 
+#: the ``phone`` device-class preset (``profile='phone:<frac>'``): a
+#: diurnal sine availability wave, heavy-tailed responsiveness, and a
+#: flaky completion process — the non-phone remainder of the population
+#: stays always-on, unit-latency, and always-completing.
+PHONE_AVAILABILITY = "sine:0.7,0.25,240"
+PHONE_RESPONSIVENESS = "lognormal:0.5"
+PHONE_COMPLETION = "bernoulli:0.9"
+
 #: bound on cached per-slot process masks (a pure-function cache; cleared
 #: wholesale when it grows past this, never invalidated)
 _SLOT_CACHE_MAX = 1024
@@ -90,18 +99,41 @@ _SLOT_CACHE_MAX = 1024
 # process grammars
 # ---------------------------------------------------------------------------
 
-def parse_process(value: str, field: str, off: str
-                  ) -> Optional[Tuple[float, float]]:
+def parse_process(value: str, field: str, off: str):
     """``'<off>'`` -> None | ``'bernoulli:<p>[:<period>]'`` ->
-    ``(p, period)``.  Raises ValueError with the accepted grammar."""
+    ``(p, period)`` | ``'sine:<p>,<amp>,<period>'`` ->
+    ``("sine", p, amp, period)``.  Raises ValueError with the grammar.
+
+    The sine form is a diurnal wave: within each ``DEFAULT_PERIOD``-wide
+    slot the Bernoulli probability is
+    ``clip(p + amp * sin(2*pi*t_mid / period), 0, 1)`` evaluated at the
+    slot midpoint ``t_mid``, so availability swells and ebbs on a
+    ``period``-second cycle while staying a pure function of
+    ``(seed, slot)``."""
     s = str(value)
     if s == off:
         return None
     kind, _, rest = s.partition(":")
+    if kind == "sine":
+        try:
+            p, amp, period = (float(v) for v in rest.split(","))
+        except ValueError:
+            raise ValueError(
+                f"bad {field} process {value!r}; expected "
+                f"'sine:<p>,<amp>,<period>' (e.g. 'sine:0.7,0.25,240')")
+        if not 0.0 <= p <= 1.0:
+            raise ValueError(
+                f"{field} sine base probability must be in [0, 1], got {p}")
+        if not amp >= 0:
+            raise ValueError(
+                f"{field} sine amplitude must be >= 0, got {amp}")
+        if not period > 0:
+            raise ValueError(f"{field} period must be > 0, got {period}")
+        return "sine", p, amp, period
     if kind != "bernoulli":
         raise ValueError(
-            f"unknown {field} process {value!r}; expected {off!r} or "
-            f"'bernoulli:<p>[:<period>]'")
+            f"unknown {field} process {value!r}; expected {off!r}, "
+            f"'bernoulli:<p>[:<period>]' or 'sine:<p>,<amp>,<period>'")
     parts = rest.split(":") if rest else []
     if len(parts) not in (1, 2):
         raise ValueError(
@@ -157,6 +189,32 @@ def parse_responsiveness(value: str):
         f"'lognormal:<sigma>' or 'uniform:<lo>,<hi>'")
 
 
+def parse_profile(value: str) -> Optional[float]:
+    """``'none'`` -> None | ``'phone:<frac>'`` -> frac in (0, 1].  A
+    profile bundles the three client-state processes for a device class
+    (the ``PHONE_*`` presets) applied to a seeded ``frac`` fraction of
+    the population; everyone else stays always-on.  Raises ValueError
+    with the grammar."""
+    s = str(value)
+    if s == "none":
+        return None
+    kind, _, arg = s.partition(":")
+    if kind != "phone":
+        raise ValueError(
+            f"unknown population profile {value!r}; expected 'none' or "
+            f"'phone:<frac>' (e.g. 'phone:0.3')")
+    try:
+        frac = float(arg)
+    except ValueError:
+        raise ValueError(
+            f"bad population profile {value!r}; <frac> must be a number "
+            f"(e.g. 'phone:0.3')")
+    if not 0.0 < frac <= 1.0:
+        raise ValueError(
+            f"population profile fraction must be in (0, 1], got {frac}")
+    return frac
+
+
 # ---------------------------------------------------------------------------
 # config
 # ---------------------------------------------------------------------------
@@ -169,9 +227,10 @@ class PopulationConfig:
     the spec bridge maps the section to ``population = None`` and the
     environment builds the exact legacy plane."""
     plane: str = "legacy"             # legacy | stacked | streaming
-    availability: str = "always"      # always | bernoulli:<p>[:<period>]
+    availability: str = "always"      # always | bernoulli:.. | sine:..
     responsiveness: str = "none"      # none | lognormal:<s> | uniform:<lo>,<hi>
     completion: str = "none"          # none | bernoulli:<p>[:<period>]
+    profile: str = "none"             # none | phone:<frac> (bundled preset)
     eval_clients: int = 0             # evaluate on a seeded subset (0 = all)
     seed: int = 0                     # dedicated population rng stream seed
 
@@ -184,7 +243,7 @@ class PopulationConfig:
     def active(self) -> bool:
         return (self.plane != "legacy" or self.availability != "always"
                 or self.responsiveness != "none" or self.completion != "none"
-                or self.eval_clients > 0)
+                or self.profile != "none" or self.eval_clients > 0)
 
 
 # ---------------------------------------------------------------------------
@@ -209,12 +268,24 @@ class Population:
         self.plane = cfg.plane
 
         # -- client-state processes (pure functions of (seed, slot)) ----
-        self._avail = parse_process(cfg.availability, "availability",
-                                    off="always")
-        self._compl = parse_process(cfg.completion, "completion", off="none")
+        # a profile preset supplies all three process strings and a
+        # seeded device-class membership mask; the spec layer rejects
+        # profile + explicit processes, so there is no merge to resolve
+        avail_s, resp_s, compl_s = (cfg.availability, cfg.responsiveness,
+                                    cfg.completion)
+        frac = parse_profile(cfg.profile)
+        self._phone: Optional[np.ndarray] = None
+        if frac is not None:
+            rng = np.random.default_rng([self._seed, PROFILE_STREAM])
+            self._phone = rng.random(self.n) < frac
+            avail_s, resp_s, compl_s = (PHONE_AVAILABILITY,
+                                        PHONE_RESPONSIVENESS,
+                                        PHONE_COMPLETION)
+        self._avail = parse_process(avail_s, "availability", off="always")
+        self._compl = parse_process(compl_s, "completion", off="none")
         self._avail_cache: Dict[int, np.ndarray] = {}
         self._compl_cache: Dict[int, np.ndarray] = {}
-        resp = parse_responsiveness(cfg.responsiveness)
+        resp = parse_responsiveness(resp_s)
         if resp is None:
             self.resp_factors = None
         else:
@@ -223,6 +294,11 @@ class Population:
             self.resp_factors = (rng.lognormal(0.0, arg, self.n)
                                  if kind == "lognormal"
                                  else rng.uniform(*arg, self.n))
+            if self._phone is not None:
+                # non-phones keep unit latency; the full-N draw happens
+                # first so the phone draws don't depend on the fraction
+                self.resp_factors = np.where(self._phone,
+                                             self.resp_factors, 1.0)
 
         # -- eval subset ------------------------------------------------
         if cfg.eval_clients <= 0 or cfg.eval_clients >= self.n:
@@ -355,6 +431,22 @@ class Population:
                    cache: Dict[int, np.ndarray]) -> Optional[np.ndarray]:
         if proc is None:
             return None
+        if proc[0] == "sine":
+            # diurnal wave: DEFAULT_PERIOD-wide slots, probability
+            # evaluated at the slot midpoint of the sine cycle
+            _, p0, amp, period = proc
+            slot = int(now // DEFAULT_PERIOD)
+            m = cache.get(slot)
+            if m is None:
+                if len(cache) > _SLOT_CACHE_MAX:
+                    cache.clear()
+                mid = (slot + 0.5) * DEFAULT_PERIOD
+                p = float(np.clip(
+                    p0 + amp * np.sin(2.0 * np.pi * mid / period), 0.0, 1.0))
+                m = np.random.default_rng(
+                    [self._seed, stream, slot]).random(self.n) < p
+                cache[slot] = m
+            return m
         p, period = proc
         slot = int(now // period)
         m = cache.get(slot)
@@ -367,17 +459,25 @@ class Population:
         return m
 
     def availability_mask(self, now: float) -> Optional[np.ndarray]:
-        """(N,) bool availability at ``now`` (slotted Bernoulli), or None
-        when the process is off — ``SimEnv.alive`` then keeps the exact
-        legacy expression."""
-        return self._slot_mask(now, self._avail, AVAIL_STREAM,
-                               self._avail_cache)
+        """(N,) bool availability at ``now`` (slotted Bernoulli or sine),
+        or None when the process is off — ``SimEnv.alive`` then keeps the
+        exact legacy expression.  Under a device-class profile the
+        process only gates the profiled class; everyone else stays on."""
+        m = self._slot_mask(now, self._avail, AVAIL_STREAM,
+                            self._avail_cache)
+        if m is not None and self._phone is not None:
+            m = m | ~self._phone
+        return m
 
     def completion_mask(self, now: float) -> Optional[np.ndarray]:
         """(N,) bool round-completion mask at ``now``, or None when the
         process is off.  Consulted by the strategies when a round reports
         back: a sampled, still-alive client can fail to return its
         update, shrinking the participant set (Eq. 4 renormalizes over
-        the survivors inside the same fused step — no retrace)."""
-        return self._slot_mask(now, self._compl, COMPL_STREAM,
-                               self._compl_cache)
+        the survivors inside the same fused step — no retrace).  Under a
+        profile, non-profiled clients always complete."""
+        m = self._slot_mask(now, self._compl, COMPL_STREAM,
+                            self._compl_cache)
+        if m is not None and self._phone is not None:
+            m = m | ~self._phone
+        return m

@@ -22,6 +22,7 @@ import numpy as np
 from repro.core import faults as faults_mod
 from repro.core import population as population_mod
 from repro.core import tiering
+from repro.core import topology as topology_mod
 from repro.core.clients import make_client_update, make_eval_fn
 from repro.runtime import sharding
 from repro.data.federated import FederatedDataset, make_federated, pad_stack
@@ -92,6 +93,12 @@ class SimConfig:
     #: full-population stack — bitwise parity with the pre-population
     #: environment.
     population: Optional[population_mod.PopulationConfig] = None
+    #: topology plane (core/topology.py; spec section ``topology``): the
+    #: hierarchical clients -> edges -> silos -> global tree with
+    #: per-link delay bands/codecs and delayed-gradient compensation.
+    #: None (the spec's all-defaults section) is the exact flat FedAT
+    #: engine.
+    topology: Optional[topology_mod.TopologyConfig] = None
 
 
 class SimEnv:
@@ -120,10 +127,17 @@ class SimEnv:
         # must stay single-device)
         self.data_axis = (self.mesh.shape.get("data", 1)
                           if self.mesh is not None else 1)
-        if sc.clients_per_round % self.data_axis:
-            k, d = sc.clients_per_round, self.data_axis
+        # the per-round fan-out that must pad over the data axis is the
+        # per-edge sample size under the topology plane, else the flat
+        # clients_per_round — the error names the spec field that failed
+        k, k_field = sc.clients_per_round, "tiers.clients_per_round"
+        if sc.topology is not None and sc.topology.clients_per_edge:
+            k, k_field = (sc.topology.clients_per_edge,
+                          "topology.clients_per_edge")
+        if k % self.data_axis:
+            d = self.data_axis
             raise ValueError(
-                f"clients_per_round={k} does not pad to a multiple of the "
+                f"{k_field}={k} does not pad to a multiple of the "
                 f"mesh data axis (size {d}, mesh {sc.mesh!r}); use a "
                 f"multiple of {d} (e.g. {((k + d - 1) // d) * d})")
         self.rng = rng
@@ -182,6 +196,15 @@ class SimEnv:
             # factors (dedicated RESP_STREAM) reshape the tier assignment
             lat = lat * self.population.resp_factors
         self.tm = tiering.assign_tiers(lat, sc.n_tiers)
+
+        # topology plane: silo/edge membership over the same profiled
+        # (responsiveness-scaled) latencies; None = flat FedAT.  Per-run
+        # link-delay draw state lives on the strategy (new_link_rng), so
+        # this cached env stays shareable across runs.
+        self.topology = (None if sc.topology is None else
+                         topology_mod.Topology(
+                             sc.topology, sc.n_clients, lat,
+                             sc.clients_per_round))
 
         # unstable clients drop permanently at a random time; the single
         # source of truth is the per-client dropout instant (+inf = stable),

@@ -13,6 +13,20 @@ Event = (tier m, sampled client ids).  Every tier-completion event triggers
 Wire bytes are accounted with the codec's measured payload ratio,
 re-measured at every eval point on a size-capped parameter sample (see
 compress/transport.py on the accounting approximation).
+
+**Topology mode** (DESIGN.md §Topology-plane).  When the environment
+carries a topology (``env.topology``), the hierarchy replaces the flat
+tiers: event = (silo s, per-edge sampled client ids).  Each silo round
+fans out over its E edges in one fused step — per-edge Eq. 4 at the
+edges, Eq. 4 over edges at the silo, then the silo enters the global
+Eq. 3 asynchronously with the same straggler-aware cross weights (silo
+blackouts renormalize through the elastic layer exactly like tier
+blackouts).  Each link class carries its own codec and delay band;
+per-link wire bytes land in ``link_bytes`` while the engine Metrics
+keep their flat client-link semantics.  A silo trains from the global
+model snapshot taken when its round was *dispatched* (the staleness
+WAN delay creates), and ``topology.compensation`` repairs that
+staleness with the delayed-gradient term before Eq. 3.
 """
 from __future__ import annotations
 
@@ -27,6 +41,7 @@ from repro.core import aggregation
 from repro.core import faults as faults_mod
 from repro.core.engine import (EngineConfig, EngineContext, Outcome,
                                ServerStrategy)
+from repro.core import topology as topology_mod
 from repro.core.simulation import SimEnv
 from repro.core.tiering import sample_round_latency
 from repro.runtime import elastic
@@ -53,6 +68,10 @@ class FedATStrategy(ServerStrategy):
 
     # ------------------------------------------------------------------
     def bind(self, env: SimEnv, cfg: EngineConfig) -> None:
+        self.topo = getattr(env, "topology", None)
+        if self.topo is not None:
+            self._bind_topology(env)
+            return
         M = env.tm.n_tiers
         self.tier_models = jax.tree.map(
             lambda l: jnp.stack([l] * M), env.params0)    # (M, ...)
@@ -69,7 +88,49 @@ class FedATStrategy(ServerStrategy):
         #: renormalization only runs while some tier is dark)
         self.tier_alive = np.ones(M, bool)
 
+    def _bind_topology(self, env: SimEnv) -> None:
+        """Topology-mode server state: the silo stack plays the tier
+        stack's role (``tier_models``/``counts``/``tier_alive`` are
+        silo-indexed so the elastic blackout machinery carries over),
+        plus the per-silo dispatch-snapshot stack, the per-link codec
+        triple with separate wire-ratio/byte ledgers, and the dedicated
+        link-delay rng stream (per run, snapshotted for crash-resume)."""
+        topo = self.topo
+        S = topo.n_silos
+        self.tier_models = jax.tree.map(
+            lambda l: jnp.stack([l] * S), env.params0)    # silo stack
+        # dispatch[s] = the global model silo s last fetched; staleness
+        # for the compensation term is measured against this snapshot
+        self.dispatch = jax.tree.map(
+            lambda l: jnp.stack([l] * S), env.params0)
+        self.counts = np.zeros(S, np.int64)
+        self.w_global = jax.tree.map(jnp.array, env.params0)
+        self.tier_alive = np.ones(S, bool)
+        # client_edge inherits the strategy/transport codec (the flat
+        # link); the WAN hops default to identity so the degenerate tree
+        # stays bitwise — override per link via topology.codec
+        self.link_codecs = tuple(
+            transport.get_codec(topo.cfg.codec_name(link, default))
+            for link, default in (("client_edge", self.codec.name),
+                                  ("edge_silo", "none"),
+                                  ("silo_global", "none")))
+        self._link_ratios = {
+            link: c.measure_ratio(env.params0, self.ratio_sample_elems)
+            for link, c in zip(topology_mod.LINK_CLASSES,
+                               self.link_codecs)}
+        self._ratio = self._link_ratios["client_edge"]
+        #: per-link-class wire bytes (both directions of every hop);
+        #: the engine Metrics keep the flat client-link semantics
+        self.link_bytes = {k: 0.0 for k in topology_mod.LINK_CLASSES}
+        self._link_rng = topo.new_link_rng()
+
     def bootstrap(self, env: SimEnv, ctx: EngineContext) -> None:
+        if self.topo is not None:
+            # every silo starts round 0 at its own pace, sampling from
+            # its edges' full pools (like the flat tier bootstrap)
+            for s in range(self.topo.n_silos):
+                self._schedule_silo(env, ctx, s)
+            return
         # every tier starts round 0 at its own pace
         for m in range(env.tm.n_tiers):
             ids = env.sample_clients(env.tm.members[m],
@@ -77,8 +138,105 @@ class FedATStrategy(ServerStrategy):
             ctx.q.push(sample_round_latency(env.tm, m, ids, ctx.rng),
                        (m, ids))
 
+    # -- topology mode ---------------------------------------------------
+    def _schedule_silo(self, env: SimEnv, ctx: EngineContext, s: int,
+                       alive: Optional[np.ndarray] = None) -> bool:
+        """Sample the next round for silo ``s``: per edge, draw the
+        client sample and its compute latency from the engine rng (the
+        same call pattern as a flat tier round, so the degenerate tree
+        consumes the stream identically), then the per-link delays from
+        the dedicated topology stream.  The silo's wall clock is the
+        slowest edge chain (compute + client_edge + edge_silo) plus its
+        skew-scaled silo_global hop.  Returns False when every edge pool
+        is empty (nothing scheduled)."""
+        topo = self.topo
+        ids_edges, wall = [], []
+        for e in range(topo.edges_per_silo):
+            pool = topo.edge_members[s][e]
+            if alive is not None:
+                pool = pool[alive[pool]]
+            ids = env.sample_clients(pool, topo.k_edge, ctx.rng)
+            ids_edges.append(ids)
+            wall.append(sample_round_latency(env.tm, 0, ids, ctx.rng)
+                        if len(ids) else None)
+        # fixed per-scheduled-round stream consumption, live or not
+        ce_d, es_d, sg_d = topo.draw_delays(self._link_rng, s)
+        live = [e for e in range(topo.edges_per_silo)
+                if wall[e] is not None]
+        if not live:
+            return False
+        lat = max(wall[e] + ce_d[e] + es_d[e] for e in live) + sg_d
+        ctx.q.push(lat, ("silo", s, tuple(ids_edges)))
+        return True
+
+    def _refresh_dispatch(self, s: int) -> None:
+        """Silo ``s`` re-fetches the current global (resample and
+        blackout-return paths; the fused step refreshes in-graph on the
+        committed path)."""
+        self.dispatch = jax.tree.map(
+            lambda d, g: d.at[s].set(g), self.dispatch, self.w_global)
+
+    def _on_event_topology(self, env: SimEnv, ctx: EngineContext,
+                           now: float, actor) -> Outcome:
+        _, s, ids_edges = actor
+        if not self.tier_alive[s]:
+            # completed into a silo blackout: in-flight work is lost
+            return Outcome.DISCARD
+        alive = env.alive(now)
+        done = env.completion(now)
+        live = []
+        for ids in ids_edges:
+            ids = ids[alive[ids]]      # churned clients never reach
+            if done is not None:       # their edge aggregator
+                ids = ids[done[ids]]
+            live.append(ids)
+        n_live = int(sum(len(i) for i in live))
+        if n_live == 0:                # whole silo sample dropped
+            if self._schedule_silo(env, ctx, s, alive):
+                self._refresh_dispatch(s)
+            return Outcome.DISCARD
+        mb = env.model_bytes
+        ce_r = self._link_ratios["client_edge"]
+        n_edges_live = sum(1 for i in live if len(i))
+        # Metrics keep the flat client-link semantics (bitwise on the
+        # degenerate tree); the per-class ledger counts both directions
+        # of every hop: K live client payloads, one payload per live
+        # edge, one per silo round
+        ctx.bytes_down += n_live * mb * ce_r
+        self.link_bytes["client_edge"] += 2 * n_live * mb * ce_r
+        self.link_bytes["edge_silo"] += \
+            2 * n_edges_live * mb * self._link_ratios["edge_silo"]
+        self.link_bytes["silo_global"] += \
+            2 * mb * self._link_ratios["silo_global"]
+        self.counts[s] += 1
+        cw = self._cross_weights()
+        self.w_global, self.tier_models, self.dispatch = \
+            ctx.executor.fedat_topology_round(
+                self.w_global, self.tier_models, self.dispatch, s, live,
+                ctx.draw_seed(), codecs=self.link_codecs,
+                use_prox=self.use_prox, cross_weights=cw)
+        ctx.bytes_up += n_live * mb * ce_r
+        self._schedule_silo(env, ctx, s, alive)
+        return Outcome.STEP
+
+    def _cross_weights(self) -> np.ndarray:
+        if not self.tier_alive.all():
+            # blackout in progress elsewhere: Eq. 3 renormalizes over
+            # the surviving units (runtime/elastic.py) — dead units get
+            # weight exactly 0 whether weighted or uniform
+            if self.weighted:
+                return elastic.masked_cross_weights(self.counts,
+                                                    self.tier_alive)
+            return (self.tier_alive.astype(np.float32)
+                    / self.tier_alive.sum())
+        if self.weighted:
+            return aggregation.cross_tier_weights_host(self.counts)
+        return aggregation.uniform_weights_host(len(self.counts))
+
     def on_event(self, env: SimEnv, ctx: EngineContext, now: float,
                  actor) -> Outcome:
+        if self.topo is not None:
+            return self._on_event_topology(env, ctx, now, actor)
         m, ids = actor
         if not self.tier_alive[m]:
             # the round completed into a blackout: the in-flight work is
@@ -108,20 +266,7 @@ class FedATStrategy(ServerStrategy):
         # eagerly (training never feeds back into them).
         ctx.bytes_down += len(ids) * env.model_bytes * self._ratio
         self.counts[m] += 1
-        if not self.tier_alive.all():
-            # blackout in progress elsewhere: Eq. 3 renormalizes over the
-            # surviving M' tiers (runtime/elastic.py) — dead tiers get
-            # weight exactly 0 whether weighted or uniform
-            if self.weighted:
-                cw = elastic.masked_cross_weights(self.counts,
-                                                  self.tier_alive)
-            else:
-                cw = (self.tier_alive.astype(np.float32)
-                      / self.tier_alive.sum())
-        elif self.weighted:
-            cw = aggregation.cross_tier_weights_host(self.counts)
-        else:
-            cw = aggregation.uniform_weights_host(len(self.counts))
+        cw = self._cross_weights()
         gate = None if ctx.faults is None else ctx.faults.gate
         if gate is None:
             self.w_global, self.tier_models = ctx.executor.fedat_round(
@@ -149,6 +294,14 @@ class FedATStrategy(ServerStrategy):
 
     def on_eval(self, env: SimEnv, ctx: EngineContext) -> None:
         # track the wire ratio as the weight distribution drifts (sampled)
+        if self.topo is not None:
+            self._link_ratios = {
+                link: c.measure_ratio(self.w_global,
+                                      self.ratio_sample_elems)
+                for link, c in zip(topology_mod.LINK_CLASSES,
+                                   self.link_codecs)}
+            self._ratio = self._link_ratios["client_edge"]
+            return
         self._ratio = self.codec.measure_ratio(self.w_global,
                                                self.ratio_sample_elems)
 
@@ -173,6 +326,12 @@ class FedATStrategy(ServerStrategy):
             self.tier_models, self.w_global, m)
         self.counts[m] = 0
         alive = env.alive(now)
+        if self.topo is not None:
+            # the returning silo re-fetches the global it just
+            # bootstrapped from, then rejoins the event loop
+            self._refresh_dispatch(m)
+            self._schedule_silo(env, ctx, m, alive)
+            return Outcome.DISCARD
         ids = env.sample_clients(
             env.tm.members[m][alive[env.tm.members[m]]],
             env.sc.clients_per_round, ctx.rng)
@@ -186,6 +345,11 @@ class FedATStrategy(ServerStrategy):
         dev = {"w_global": self.w_global, "tier_models": self.tier_models}
         host = {"counts": self.counts.copy(), "ratio": self._ratio,
                 "tier_alive": self.tier_alive.copy()}
+        if self.topo is not None:
+            dev["dispatch"] = self.dispatch
+            host["link_rng"] = self._link_rng.bit_generator.state
+            host["link_bytes"] = dict(self.link_bytes)
+            host["link_ratios"] = dict(self._link_ratios)
         return dev, host
 
     def restore(self, dev, host) -> None:
@@ -194,3 +358,9 @@ class FedATStrategy(ServerStrategy):
         self.counts = np.asarray(host["counts"], np.int64)
         self._ratio = host["ratio"]
         self.tier_alive = np.asarray(host["tier_alive"], bool)
+        if self.topo is not None:
+            self.dispatch = dev["dispatch"]
+            self._link_rng = self.topo.new_link_rng()
+            self._link_rng.bit_generator.state = host["link_rng"]
+            self.link_bytes = dict(host["link_bytes"])
+            self._link_ratios = dict(host["link_ratios"])

@@ -41,25 +41,38 @@ def test_json_round_trip_golden():
     # is part of the provenance contract — changing any default field,
     # field name, or the canonicalization breaks attribution of archived
     # bench results and must be deliberate (bump SPEC_VERSION).
-    # v6 added the population section (million-client population plane;
-    # re-pinned from "f556a6283a5b" deliberately); v5 added the faults
-    # section (deterministic fault plane); v4 added
-    # data.attention_backend (kernel-layer attention vs. the reference
-    # oracle); v3 replaced data.task with the registry-backed data.model
-    # (+ token knobs); v2 added the mesh section.
-    assert d["spec_version"] == api.SPEC_VERSION == 6
-    assert spec.hash() == "2a8635d9e5d9"
+    # v7 added the topology section (hierarchical geo-distributed
+    # federation) and population.profile (device-class presets;
+    # re-pinned from "2a8635d9e5d9" deliberately); v6 added the
+    # population section (million-client population plane; re-pinned
+    # from "f556a6283a5b" deliberately); v5 added the faults section
+    # (deterministic fault plane); v4 added data.attention_backend
+    # (kernel-layer attention vs. the reference oracle); v3 replaced
+    # data.task with the registry-backed data.model (+ token knobs);
+    # v2 added the mesh section.
+    assert d["spec_version"] == api.SPEC_VERSION == 7
+    assert spec.hash() == "60fd95ec9d49"
 
 
 def test_old_spec_documents_still_parse():
-    """Version-1/2/3/4/5 documents (no population section pre-v6, no
-    faults section pre-v5, data.task enum pre-v3, no attention_backend
-    pre-v4, v1 additionally pre-mesh) parse to the same spec under
-    SPEC_VERSION 6; unknown versions still fail with the supported
+    """Version-1/2/3/4/5/6 documents (no topology section or
+    population.profile pre-v7, no population section pre-v6, no faults
+    section pre-v5, data.task enum pre-v3, no attention_backend pre-v4,
+    v1 additionally pre-mesh) parse to the same spec under
+    SPEC_VERSION 7; unknown versions still fail with the supported
     range.  (Full migration coverage lives in
     tests/test_model_registry.py.)"""
     spec = api.ExperimentSpec()
     d = spec.to_dict()
+    d.pop("topology")
+    d["population"].pop("profile")
+    d["spec_version"] = 6
+    back = api.ExperimentSpec.from_dict(d)
+    assert back == spec
+    # v6 docs get the inert topology plane and the 'none' profile exactly
+    assert back.topology == api.TopologySpec()
+    assert back.topology.to_config() is None
+    assert back.population.profile == "none"
     d.pop("population")
     d["spec_version"] = 5
     back = api.ExperimentSpec.from_dict(d)

@@ -83,7 +83,7 @@ def test_old_documents_parse_and_migrate(version, task, model):
            "engine": {"total_updates": 4}}
     spec = api.ExperimentSpec.from_json(json.dumps(doc))
     assert spec.data.model == model
-    assert spec.to_dict()["spec_version"] == api.SPEC_VERSION == 6
+    assert spec.to_dict()["spec_version"] == api.SPEC_VERSION == 7
     assert "task" not in spec.to_dict()["data"]
     spec.validate()
 

@@ -239,6 +239,72 @@ def test_process_grammar_parses_and_rejects():
             population_mod.parse_responsiveness(bad)
 
 
+def test_sine_grammar_parses_and_rejects():
+    assert population_mod.parse_process("sine:0.7,0.25,240", "a", "always") \
+        == ("sine", 0.7, 0.25, 240.0)
+    for bad in ("sine:0.7", "sine:0.7,0.25", "sine:1.5,0.25,240",
+                "sine:0.7,-0.1,240", "sine:0.7,0.25,0", "sine:x,y,z"):
+        with pytest.raises(ValueError):
+            population_mod.parse_process(bad, "a", "always")
+
+
+def test_profile_grammar_parses_and_rejects():
+    assert population_mod.parse_profile("none") is None
+    assert population_mod.parse_profile("phone:0.3") == 0.3
+    assert population_mod.parse_profile("phone:1") == 1.0
+    for bad in ("tablet:0.5", "phone:0", "phone:1.5", "phone:x", "phone"):
+        with pytest.raises(ValueError):
+            population_mod.parse_profile(bad)
+
+
+def test_sine_availability_is_diurnal():
+    """The slot probability rides the sine wave: the high half-cycle of
+    a period-240 wave has visibly more availability than the low half,
+    and the mask stays a deterministic function of (seed, slot)."""
+    p = _pop(n=20_000, availability="sine:0.5,0.4,240")
+    # slot midpoints at t=60 (peak, p=0.9) and t=180 (trough, p=0.1)
+    hi = p.availability_mask(60.0).mean()
+    lo = p.availability_mask(180.0).mean()
+    assert abs(hi - 0.9) < 0.02 and abs(lo - 0.1) < 0.02
+    q = _pop(n=20_000, availability="sine:0.5,0.4,240")
+    assert np.array_equal(p.availability_mask(60.0),
+                          q.availability_mask(60.0))
+
+
+def test_phone_profile_gates_only_the_phone_class():
+    """profile='phone:0.5' applies the preset processes to a seeded half
+    of the population; the other half stays always-on, always-complete,
+    unit-latency."""
+    p = _pop(n=20_000, profile="phone:0.5")
+    phone = p._phone
+    assert abs(phone.mean() - 0.5) < 0.02
+    avail = p.availability_mask(10.0)
+    compl = p.completion_mask(10.0)
+    assert avail[~phone].all() and compl[~phone].all()
+    assert not avail[phone].all()       # the sine process gates phones
+    assert (p.resp_factors[~phone] == 1.0).all()
+    assert not (p.resp_factors[phone] == 1.0).all()
+
+
+def test_phone_profile_runs_end_to_end():
+    res = api.build(api.ExperimentSpec().with_overrides({
+        "data.n_clients": 64, "data.samples_per_client": 20,
+        "data.image_hw": 8, "tiers.n_tiers": 2,
+        "tiers.clients_per_round": 4, "tiers.n_unstable": 0,
+        "engine.local_epochs": 1, "engine.total_updates": 6,
+        "engine.eval_every": 3,
+        "population.profile": "phone:0.3"})).run()
+    assert res.metrics.times
+
+
+def test_profile_owns_the_process_fields():
+    with pytest.raises(api.SpecError, match="profile"):
+        api.PopulationSpec(profile="phone:0.3",
+                           responsiveness="lognormal:0.5").validate(100)
+    with pytest.raises(api.SpecError, match="phone"):
+        api.PopulationSpec(profile="watch:0.3").validate(100)
+
+
 def test_availability_deterministic_and_slotted():
     p = _pop(n=400, availability="bernoulli:0.7:20")
     q = _pop(n=400, availability="bernoulli:0.7:20")

@@ -1,0 +1,306 @@
+"""Topology plane (core/topology.py + spec topology section):
+hierarchical geo-distributed federation — clients -> edge aggregators ->
+regional silos -> global server — with per-link WAN delay bands,
+per-link codecs, and delayed-gradient compensation.
+
+The two bitwise anchors of the plane:
+
+  * specs with the *default* topology section map to
+    ``SimConfig.topology = None`` and run the flat engine byte-for-byte
+    (the engine-parity oracle covers that side);
+  * a *degenerate* active topology (1 silo, 1 edge, zero-width delay
+    bands, default codecs) must replay the flat FedAT run bitwise —
+    singleton Eq. 4 / Eq. 3 averages are exact identities, the extra
+    pins are neutral, and the dedicated link-delay stream draws exactly
+    0.0 WAN delay.
+"""
+import dataclasses
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import topology as topology_mod
+from repro.core.scheduler import Metrics
+
+
+def _base(**overrides):
+    kw = dict(
+        data=api.DataSpec(n_clients=24, samples_per_client=24, image_hw=8),
+        tiers=api.TierSpec(n_tiers=1, clients_per_round=4, n_unstable=0),
+        engine=api.EngineSpec(total_updates=8, eval_every=4,
+                              local_epochs=1),
+        strategy=api.StrategySpec("fedat"),
+    )
+    kw.update(overrides)
+    return api.ExperimentSpec(**kw)
+
+
+def _metrics_fields(m):
+    return [getattr(m, f.name) for f in dataclasses.fields(Metrics)]
+
+
+# ---------------------------------------------------------------------------
+# spec surface
+# ---------------------------------------------------------------------------
+
+def test_topology_spec_round_trip():
+    spec = _base(topology=api.TopologySpec(
+        n_silos=2, edges_per_silo=2, clients_per_edge=2,
+        delay={"client_edge": (0.5, 1.5), "silo_global": (2.0, 6.0)},
+        codec={"silo_global": "quantize8"},
+        compensation=0.5, silo_skew=0.25, seed=3))
+    back = api.ExperimentSpec.from_json(spec.to_json())
+    assert back == spec and back.hash() == spec.hash()
+    # delay bands arrive as lists from JSON but compare as tuples
+    assert back.topology.delay["client_edge"] == (0.5, 1.5)
+
+
+def test_default_topology_section_is_inert():
+    spec = _base()
+    assert spec.topology.to_config() is None
+    assert spec.to_sim_config().topology is None
+    # seed alone stays inert (no delay/codec/extra structure to seed)
+    assert api.TopologySpec(seed=7).to_config() is None
+
+
+def test_topology_validation_errors():
+    for topo, msg in [
+        (api.TopologySpec(n_silos=0), "n_silos"),
+        (api.TopologySpec(n_silos=30), "n_clients"),
+        (api.TopologySpec(n_silos=2, delay={"wan": (0, 1)}),
+         r"client_edge.*edge_silo.*silo_global"),
+        (api.TopologySpec(n_silos=2, codec={"lan": "none"}),
+         r"client_edge.*edge_silo.*silo_global"),
+        (api.TopologySpec(n_silos=2, delay={"silo_global": (3.0, 1.0)}),
+         "lo <= hi"),
+        (api.TopologySpec(n_silos=2, codec={"silo_global": "zstd"}),
+         "codec"),
+        (api.TopologySpec(n_silos=2, compensation=1.5), "compensation"),
+        (api.TopologySpec(n_silos=2, silo_skew=-0.5), "silo_skew"),
+    ]:
+        with pytest.raises(api.SpecError, match=msg):
+            _base(topology=topo).validate()
+    # the topology plane requires the tiered FedAT strategy
+    with pytest.raises(api.SpecError, match="fedat"):
+        _base(strategy=api.StrategySpec("fedavg"),
+              topology=api.TopologySpec(n_silos=2)).validate()
+    # ...and excludes the server-side validation gate (silo updates are
+    # aggregates of aggregates; per-update gating is not defined yet)
+    with pytest.raises(api.SpecError, match="gate"):
+        _base(faults=api.FaultSpec(nan_rate=0.1),
+              topology=api.TopologySpec(n_silos=2)).validate()
+
+
+def test_per_edge_k_pad_error_names_the_field_path():
+    """The mesh data-axis divisibility check fires for the
+    topology-scoped per-edge K too, naming topology.clients_per_edge and
+    hinting the nearest valid value."""
+    with pytest.raises(api.SpecError,
+                       match=r"topology\.clients_per_edge=10.*multiple "
+                             r"of 16.*e\.g\. 16"):
+        _base(tiers=api.TierSpec(n_tiers=1, clients_per_round=16,
+                                 n_unstable=0),
+              mesh=api.MeshSpec(kind="production"),
+              topology=api.TopologySpec(
+                  n_silos=2, clients_per_edge=10)).validate()
+
+
+def test_topology_overrides_open_dicts():
+    spec = _base().with_overrides({
+        "topology.n_silos": 2,
+        "topology.delay.silo_global": [1.0, 3.0],
+        "topology.codec.client_edge": "quantize8"})
+    assert spec.topology.n_silos == 2
+    assert spec.topology.delay["silo_global"] == (1.0, 3.0)
+    assert spec.topology.codec["client_edge"] == "quantize8"
+
+
+# ---------------------------------------------------------------------------
+# the degenerate bitwise contract
+# ---------------------------------------------------------------------------
+
+def test_degenerate_topology_is_bitwise_the_flat_run():
+    """1 silo, 1 edge, zero-width delay band: the hierarchical path is
+    an exact identity over the flat FedAT run — same floats, same byte
+    counters, same event times."""
+    flat = api.build(_base()).run().metrics
+    degen = api.build(_base(topology=api.TopologySpec(
+        n_silos=1, edges_per_silo=1,
+        delay={"silo_global": (0.0, 0.0)}))).run().metrics
+    assert _metrics_fields(flat) == _metrics_fields(degen)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical runs
+# ---------------------------------------------------------------------------
+
+def test_multi_silo_reports_per_link_class_bytes():
+    run = api.build(_base(topology=api.TopologySpec(
+        n_silos=2, edges_per_silo=2, clients_per_edge=2,
+        delay={"client_edge": (0.5, 1.5), "edge_silo": (1.0, 3.0),
+               "silo_global": (2.0, 6.0)},
+        codec={"client_edge": "quantize8", "silo_global": "quantize8"})))
+    res = run.run()
+    lb = run.strategy.link_bytes
+    assert set(lb) == set(topology_mod.LINK_CLASSES)
+    assert all(v > 0 for v in lb.values())
+    # quantize8 on the client_edge hop: 4 padded clients' payloads per
+    # round cost less than the 2 uncompressed edge_silo payloads x2
+    assert lb["client_edge"] < lb["edge_silo"]
+    assert res.metrics.times, "hierarchical run recorded no evals"
+
+
+def test_compensation_changes_the_trajectory():
+    """lambda > 0 adds the delayed-gradient correction on the stale silo
+    path — a different (still deterministic) trajectory."""
+    topo = dict(n_silos=2, edges_per_silo=2,
+                delay={"silo_global": (5.0, 15.0)}, silo_skew=1.0)
+    m0 = api.build(_base(topology=api.TopologySpec(**topo))).run().metrics
+    m1 = api.build(_base(topology=api.TopologySpec(
+        **topo, compensation=0.5))).run().metrics
+    m1b = api.build(_base(topology=api.TopologySpec(
+        **topo, compensation=0.5))).run().metrics
+    assert m0.acc != m1.acc
+    assert _metrics_fields(m1) == _metrics_fields(m1b)  # deterministic
+
+
+# ---------------------------------------------------------------------------
+# cross-plane: topology x faults x population
+# ---------------------------------------------------------------------------
+
+def test_silo_blackout_renormalizes_without_retrace():
+    """A silo blackout drops its row from Eq. 3 (elastic renormalization
+    over the survivors) and the return path re-bootstraps it — all
+    through the one compiled topology step (zero retraces)."""
+    run = api.build(_base(
+        engine=api.EngineSpec(total_updates=14, eval_every=7,
+                              local_epochs=1),
+        faults=api.FaultSpec(blackouts=1, blackout_duration=40.0,
+                             blackout_window=(10.0, 80.0)),
+        topology=api.TopologySpec(n_silos=2, edges_per_silo=2,
+                                  delay={"silo_global": (1.0, 3.0)})))
+    res = run.run()
+    assert res.metrics.times
+    counts = run.env.executor().trace_counts
+    topo_keys = [k for k in counts if k[0] == "fedat_topo"]
+    assert len(topo_keys) == 1 and counts[topo_keys[0]] == 1
+
+
+def test_churned_clients_never_reach_their_edge():
+    """Churn that takes the whole population down for the whole run
+    means no client update ever reaches an edge: the engine drains
+    without committing a single global update (and without crashing)."""
+    run = api.build(_base(
+        faults=api.FaultSpec(churn_rate=1.0, churn_events=1,
+                             churn_downtime=1e6, churn_window=(0.1, 0.2)),
+        topology=api.TopologySpec(n_silos=2, edges_per_silo=2,
+                                  delay={"silo_global": (1.0, 3.0)})))
+    res = run.run()
+    assert run.strategy.link_bytes["silo_global"] >= 0  # ledger intact
+    # at most the pre-churn head of the run committed anything
+    assert len(res.metrics.rounds) <= 1
+
+
+def test_topology_composes_with_population_processes():
+    spec = _base(
+        population=api.PopulationSpec(availability="bernoulli:0.7:20",
+                                      completion="bernoulli:0.8"),
+        topology=api.TopologySpec(n_silos=2, edges_per_silo=2,
+                                  delay={"silo_global": (1.0, 3.0)}))
+    res = api.build(spec).run()
+    assert res.metrics.times
+
+
+def test_topology_composes_with_phone_profile():
+    spec = _base(
+        population=api.PopulationSpec(profile="phone:0.5"),
+        topology=api.TopologySpec(n_silos=2, edges_per_silo=2,
+                                  delay={"silo_global": (1.0, 3.0)}))
+    res = api.build(spec).run()
+    assert res.metrics.times
+
+
+def test_crash_resume_is_bitwise_under_topology():
+    """The engine snapshot carries the dispatch stack, the link-delay
+    rng state, and the per-link byte ledger: an interrupted hierarchical
+    run resumes to the exact uninterrupted trajectory."""
+    import os
+    spec = _base(
+        engine=api.EngineSpec(total_updates=12, eval_every=2,
+                              local_epochs=1),
+        faults=api.FaultSpec(checkpoint_every=2, seed=4),
+        topology=api.TopologySpec(n_silos=2, edges_per_silo=2,
+                                  delay={"silo_global": (1.0, 3.0)},
+                                  codec={"client_edge": "quantize8"},
+                                  compensation=0.3))
+    ref = api.build(spec).run().metrics
+
+    class Abort(Exception):
+        pass
+
+    seen = []
+
+    def bomb(point):
+        seen.append(point)
+        if len(seen) == 3:
+            raise Abort
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as ck:
+        with pytest.raises(Abort):
+            api.build(spec).run(on_eval=bomb, checkpoint_dir=ck)
+        assert os.listdir(os.path.join(ck, "engine"))
+        run = api.build(spec)
+        res = run.run(checkpoint_dir=ck, resume_engine=True)
+    assert _metrics_fields(res.metrics) == _metrics_fields(ref)
+    assert all(v == 1 for v in run.env.executor().trace_counts.values())
+
+
+# ---------------------------------------------------------------------------
+# D == 1 mesh contract (forced 4-device host mesh, subprocess)
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses, json
+    import numpy as np
+    from repro import api
+    from repro.core.scheduler import Metrics
+
+    def mk(mesh):
+        return api.ExperimentSpec(
+            data=api.DataSpec(n_clients=24, samples_per_client=24,
+                              image_hw=8),
+            tiers=api.TierSpec(n_tiers=1, clients_per_round=4,
+                               n_unstable=0),
+            engine=api.EngineSpec(total_updates=6, eval_every=3,
+                                  local_epochs=1),
+            strategy=api.StrategySpec("fedat"),
+            mesh=mesh,
+            topology=api.TopologySpec(n_silos=2, edges_per_silo=2,
+                                      delay={"silo_global": (1.0, 3.0)}))
+
+    m0 = api.build(mk(api.MeshSpec(kind="single"))).run().metrics
+    m1 = api.build(mk(api.MeshSpec(kind="host", n_pods=4))).run().metrics
+    eq = all(getattr(m0, f.name) == getattr(m1, f.name)
+             for f in dataclasses.fields(Metrics))
+    print("RESULT" + json.dumps({"bitwise": eq, "times": m0.times}))
+""")
+
+
+def test_multi_silo_on_pod_axis_stays_bitwise():
+    """host:4 maps the silo stack onto 4 pod slots with D == 1 — the
+    placement must not perturb a single bit vs the single-device run."""
+    proc = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                          capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][-1]
+    out = json.loads(line[len("RESULT"):])
+    assert out["bitwise"] and out["times"]
